@@ -1,0 +1,26 @@
+"""Fig. 10/11: sensitivity to the accuracy target (95/97/98/99%)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, emit, policy_ratios
+
+STREAMS = ("auburn_c", "lausanne", "cnn")
+TARGETS = (0.95, 0.97, 0.98, 0.99)
+
+
+def run():
+    for tgt in TARGETS:
+        Is, Qs = [], []
+        for s in STREAMS:
+            r = policy_ratios(s, "balance", precision_target=tgt,
+                              recall_target=tgt)
+            Is.append(r["I"])
+            Qs.append(r["Q"])
+        emit(f"fig10.target_{int(tgt*100)}", 0.0,
+             f"I_avg={np.mean(Is):.0f}x|Q_avg={np.mean(Qs):.0f}x"
+             f"|paper_trend=I~const,Q:37->8x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Fig. 6: parameter selection — ingest cost vs query latency Pareto
+boundary on auburn_c, with Balance / Opt-Ingest / Opt-Query choices."""
+from __future__ import annotations
+
+from benchmarks.common import GT_FLOPS, Timer, emit, stream_sweep
+from repro.core.params import pareto_boundary, select
+
+
+def run(stream="auburn_c"):
+    with Timer() as t:
+        evals, n_objects = stream_sweep(stream)
+    front = pareto_boundary(evals)
+    ingest_all = n_objects * GT_FLOPS
+    pts = ";".join(
+        f"({ingest_all/e.ingest_flops:.0f}x,{ingest_all/max(e.query_flops,1):.0f}x)"
+        for e in front[:8])
+    emit(f"fig6.pareto.{stream}", t.us, f"n_viable={sum(e.viable for e in evals)}"
+         f"|n_front={len(front)}|front={pts}")
+    for policy in ("balance", "opt_ingest", "opt_query"):
+        c = select(evals, policy)
+        if c is None:
+            emit(f"fig6.{policy}.{stream}", 0.0, "no-viable-config")
+            continue
+        emit(f"fig6.{policy}.{stream}", 0.0,
+             f"model={c.candidate.model_id}|K={c.candidate.K}"
+             f"|T={c.candidate.T}|P={c.precision:.3f}|R={c.recall:.3f}")
+    return front
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Fig. 7 / Fig. 1: end-to-end ingest cost (vs Ingest-all) and query latency
+(vs Query-all) per stream, Balance policy, 95% precision+recall targets."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, emit, policy_ratios
+from repro.core.query import gpu_seconds
+
+STREAMS = ("auburn_c", "auburn_r", "city_a_d", "bend", "jacksonh",
+           "church_st", "lausanne", "sittard", "cnn")
+
+
+def run():
+    Is, Qs = [], []
+    for s in STREAMS:
+        with Timer() as t:
+            r = policy_ratios(s, "balance")
+        Is.append(r["I"])
+        Qs.append(r["Q"])
+        emit(f"fig7.balance.{s}", t.us,
+             f"I={r['I']:.0f}x|Q={r['Q']:.0f}x|P={r['precision']:.3f}"
+             f"|R={r['recall']:.3f}|objects={r['n_objects']}")
+    emit("fig7.average", 0.0,
+         f"I_avg={np.mean(Is):.0f}x|Q_avg={np.mean(Qs):.0f}x"
+         f"|I_max={np.max(Is):.0f}x|Q_max={np.max(Qs):.0f}x"
+         f"|paper=I58x,Q37x")
+    return Is, Qs
+
+
+if __name__ == "__main__":
+    run()

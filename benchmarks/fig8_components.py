@@ -1,0 +1,69 @@
+"""Fig. 8: component breakdown — (1) compressed generic model,
+(2) + specialization, (3) + clustering. Same 95% accuracy target."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (GT_FLOPS, Timer, emit, get_model,
+                               load_stream)
+from repro.core.ingest import IngestConfig, ingest
+from repro.core.query import dominant_classes, gt_frames_by_class, \
+    precision_recall
+
+STREAMS = ("auburn_c", "lausanne", "cnn")
+
+
+def _eval(index, labels, frames, K):
+    dom = dominant_classes(labels)
+    gtf = gt_frames_by_class(labels, frames)
+    ps, rs, cost = [], [], []
+    for x in dom:
+        cids = index.lookup(x, K)
+        matched = [c for c in cids
+                   if labels[index.clusters[c].members[0]] == x]
+        p, r = precision_recall(index.frames_of(matched),
+                                gtf.get(x, np.array([])))
+        ps.append(p)
+        rs.append(r)
+        cost.append(len(cids) * GT_FLOPS)
+    return np.mean(ps), np.mean(rs), np.mean(cost)
+
+
+def run():
+    for stream in STREAMS:
+        vs, crops, frames, labels = load_stream(stream)
+        ingest_all = len(crops) * GT_FLOPS
+        query_all = len(crops) * GT_FLOPS
+
+        # (1) generic compressed model, no clustering (T=0 -> singletons)
+        apply_g, flops_g, _ = get_model(stream, "cheap2", crops, labels)
+        idx1, st1 = ingest(crops, frames, apply_g, flops_g,
+                           IngestConfig(K=8, threshold=1e-6,
+                                        max_clusters=4096, pixel_diff=False))
+        p1, r1, q1 = _eval(idx1, labels, frames, K=8)
+
+        # (2) + specialization (still no clustering)
+        apply_s, flops_s, cmap = get_model(stream, "spec2", crops, labels)
+        idx2, st2 = ingest(crops, frames, apply_s, flops_s,
+                           IngestConfig(K=2, threshold=1e-6,
+                                        max_clusters=4096, pixel_diff=False),
+                           class_map=cmap)
+        p2, r2, q2 = _eval(idx2, labels, frames, K=2)
+
+        # (3) + clustering
+        idx3, st3 = ingest(crops, frames, apply_s, flops_s,
+                           IngestConfig(K=2, threshold=0.8,
+                                        max_clusters=2048),
+                           class_map=cmap)
+        p3, r3, q3 = _eval(idx3, labels, frames, K=2)
+
+        for tag, st_, q, p, r in (("compressed", st1, q1, p1, r1),
+                                  ("comp+spec", st2, q2, p2, r2),
+                                  ("comp+spec+cluster", st3, q3, p3, r3)):
+            emit(f"fig8.{stream}.{tag}", 0.0,
+                 f"I={ingest_all/max(st_.cheap_flops,1):.0f}x"
+                 f"|Q={query_all/max(q,1):.0f}x|P={p:.3f}|R={r:.3f}")
+
+
+if __name__ == "__main__":
+    run()

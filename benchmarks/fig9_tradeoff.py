@@ -1,0 +1,28 @@
+"""Fig. 9 (and Fig. 1 zoom): Opt-Ingest vs Opt-Query (I, Q) per stream."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, emit, policy_ratios
+
+STREAMS = ("auburn_c", "auburn_r", "jacksonh", "lausanne", "cnn")
+
+
+def run():
+    agg = {"opt_ingest": ([], []), "opt_query": ([], [])}
+    for s in STREAMS:
+        for policy in ("opt_ingest", "opt_query"):
+            r = policy_ratios(s, policy)
+            agg[policy][0].append(r["I"])
+            agg[policy][1].append(r["Q"])
+            emit(f"fig9.{policy}.{s}", 0.0,
+                 f"I={r['I']:.0f}x|Q={r['Q']:.0f}x"
+                 f"|P={r['precision']:.3f}|R={r['recall']:.3f}")
+    for policy, (Is, Qs) in agg.items():
+        emit(f"fig9.{policy}.average", 0.0,
+             f"I_avg={np.mean(Is):.0f}x|Q_avg={np.mean(Qs):.0f}x"
+             f"|paper_optI=I95x,Q35x|paper_optQ=I15x,Q49x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Parameter selection walkthrough (§4.4, Fig. 6).
+
+Sweeps (CheapCNN_i, K, T) for one stream, prints the viable configs, the
+Pareto boundary, and the Balance / Opt-Ingest / Opt-Query selections.
+
+  PYTHONPATH=src:. python examples/pareto_tradeoff.py
+"""
+import numpy as np
+
+from benchmarks.common import GT_FLOPS, stream_sweep
+from repro.core.params import pareto_boundary, select
+
+
+def main():
+    stream = "auburn_c"
+    evals, n_objects = stream_sweep(stream, duration_s=60)
+    ingest_all = n_objects * GT_FLOPS
+    query_all = n_objects * GT_FLOPS
+
+    viable = [e for e in evals if e.viable]
+    front = pareto_boundary(evals)
+    print(f"{stream}: {len(evals)} configs, {len(viable)} viable, "
+          f"{len(front)} on the Pareto boundary\n")
+    print(f"{'model':>7} {'K':>3} {'T':>5} {'P':>6} {'R':>6} "
+          f"{'ingest':>9} {'query':>9}  on-front")
+    for e in sorted(viable, key=lambda e: e.ingest_flops)[:15]:
+        print(f"{e.candidate.model_id:>7} {e.candidate.K:>3} "
+              f"{e.candidate.T:>5.2f} {e.precision:>6.3f} {e.recall:>6.3f} "
+              f"{ingest_all/e.ingest_flops:>8.0f}x "
+              f"{query_all/max(e.query_flops,1):>8.0f}x  "
+              f"{'*' if e in front else ''}")
+
+    print()
+    for policy in ("balance", "opt_ingest", "opt_query"):
+        c = select(evals, policy)
+        if c is None:
+            print(f"{policy:>11}: no viable config")
+            continue
+        print(f"{policy:>11}: model={c.candidate.model_id} K={c.candidate.K} "
+              f"T={c.candidate.T} -> ingest {ingest_all/c.ingest_flops:.0f}x "
+              f"cheaper, query {query_all/max(c.query_flops,1):.0f}x faster")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Specialization study (§4.3): generic vs specialized cheap CNN.
+
+Trains (a) a generic 1000-way compressed CNN and (b) a per-stream
+specialized (Ls+OTHER) CNN with the full training substrate (AdamW +
+cosine, checkpoint/restart), then shows the paper's claim: the specialized
+model reaches the recall target with a much smaller K.
+
+  PYTHONPATH=src:. python examples/train_specialized.py
+"""
+import numpy as np
+
+from repro.common.config import CheapCNNConfig
+from repro.core import IngestConfig, ingest
+from repro.core.query import (dominant_classes, gt_frames_by_class,
+                              precision_recall)
+from repro.core.specialize import specialize, train_generic
+from repro.data import get_stream
+
+
+def recall_at_k(index, labels, frames, ks):
+    dom = dominant_classes(labels)
+    gtf = gt_frames_by_class(labels, frames)
+    out = {}
+    for K in ks:
+        rs = []
+        for x in dom:
+            cids = index.lookup(x, K)
+            matched = [c for c in cids
+                       if labels[index.clusters[c].members[0]] == x]
+            _, r = precision_recall(index.frames_of(matched),
+                                    gtf.get(x, np.array([])))
+            rs.append(r)
+        out[K] = float(np.mean(rs))
+    return out
+
+
+def main():
+    stream = get_stream("auburn_r", duration_s=90, fps=10)
+    crops, frames, _, labels = stream.objects_array()
+    print(f"{len(crops)} objects, {len(np.unique(labels))} classes")
+
+    generic_cfg = CheapCNNConfig("generic", input_res=32, n_blocks=3,
+                                 width=24, n_classes=1000, feature_dim=128)
+    spec_cfg = CheapCNNConfig("spec", input_res=32, n_blocks=3, width=24,
+                              feature_dim=128)
+
+    print("training generic 1000-way model (300 steps)...")
+    gm = train_generic(crops, labels, generic_cfg, steps=300)
+    print(f"  final acc {gm.history[-1]['acc']:.3f}")
+    print("training specialized Ls=5+OTHER model (300 steps)...")
+    sm = specialize(crops, labels, Ls=5, base_cfg=spec_cfg, steps=300)
+    print(f"  final acc {sm.history[-1]['acc']:.3f}")
+
+    ks = (1, 2, 4, 8, 16)
+    gi, _ = ingest(crops, frames, gm.make_apply(), 1e9,
+                   IngestConfig(K=max(ks), threshold=0.8, max_clusters=1024))
+    si, _ = ingest(crops, frames, sm.make_apply(), 1e9,
+                   IngestConfig(K=max(ks), threshold=0.8, max_clusters=1024),
+                   class_map=sm.class_map)
+    rg = recall_at_k(gi, labels, frames, ks)
+    rs = recall_at_k(si, labels, frames, ks)
+    print(f"{'K':>4} {'generic recall':>15} {'specialized recall':>20}")
+    for K in ks:
+        print(f"{K:>4} {rg[K]:>15.3f} {rs[K]:>20.3f}")
+    kg = next((K for K in ks if rg[K] >= 0.95), None)
+    ksp = next((K for K in ks if rs[K] >= 0.95), None)
+    print(f"K needed for 95% recall: generic={kg}, specialized={ksp} "
+          f"(paper: specialization drops K from 60-200 to 2-4)")
+
+
+if __name__ == "__main__":
+    main()

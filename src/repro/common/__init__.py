@@ -1,0 +1,13 @@
+from repro.common.config import (  # noqa: F401
+    CheapCNNConfig,
+    DiTConfig,
+    DIT_SHAPES,
+    EffNetConfig,
+    LMConfig,
+    LM_SHAPES,
+    ShapeCell,
+    ViTConfig,
+    VISION_SHAPES,
+    reduced,
+    shapes_for,
+)

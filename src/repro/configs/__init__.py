@@ -1,0 +1,2 @@
+"""Architecture configs (one module per assigned arch) and the registry."""
+from repro.configs.registry import ARCH_IDS, get_arch, get_shapes  # noqa: F401

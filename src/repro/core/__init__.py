@@ -1,0 +1,13 @@
+"""Focus core: the paper's contribution (ingest/query split, top-K index,
+clustering, parameter selection, specialization)."""
+from repro.core.index import ClassMap, Cluster, TopKIndex, OTHER  # noqa: F401
+from repro.core.ingest import IngestConfig, IngestStats, ingest  # noqa: F401
+from repro.core.query import (  # noqa: F401
+    BaselineCosts,
+    QueryResult,
+    dominant_classes,
+    gt_frames_by_class,
+    gpu_seconds,
+    precision_recall,
+    query,
+)

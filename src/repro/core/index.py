@@ -1,0 +1,183 @@
+"""The Focus top-K ingest index (paper §3, §4.1).
+
+Structure (exactly the paper's):
+    object class -> <cluster ID>
+    cluster ID   -> [centroid object, <objects> in cluster, <frame IDs>]
+
+Clusters carry a running mean of the cheap CNN's class probabilities; the
+cluster's top-K class set is the top-K of that mean, which supports the
+"dynamically adjusting K at query-time" enhancement (§5): lookup with any
+Kx <= K uses rank information stored at ingest.
+
+When the ingest CNN is *specialized* (§4.3), the index stores local class ids
+(0..Ls-1 plus OTHER) and a ClassMap translates query-time global classes;
+querying a class outside the specialized set routes to the OTHER clusters.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+OTHER = -1   # sentinel for the OTHER class in *global* space
+
+
+@dataclass
+class ClassMap:
+    """Global class id <-> local specialized id. Local Ls is OTHER."""
+    global_ids: np.ndarray        # (Ls,) global ids of specialized classes
+
+    @property
+    def n_local(self) -> int:     # Ls + 1 (OTHER)
+        return len(self.global_ids) + 1
+
+    @property
+    def other_local(self) -> int:
+        return len(self.global_ids)
+
+    def to_local(self, global_id: int) -> int:
+        hits = np.nonzero(self.global_ids == global_id)[0]
+        return int(hits[0]) if len(hits) else self.other_local
+
+    def to_global(self, local_id: int) -> int:
+        if local_id == self.other_local:
+            return OTHER
+        return int(self.global_ids[local_id])
+
+
+@dataclass
+class Cluster:
+    cluster_id: int
+    centroid: np.ndarray                 # feature vector (D,)
+    rep_crop: np.ndarray                 # centroid object's crop (for GT-CNN)
+    mean_probs: np.ndarray               # (C_local,) running mean class probs
+    count: int = 0
+    members: List[int] = field(default_factory=list)   # object ids
+    frames: List[int] = field(default_factory=list)    # frame ids
+
+    def add(self, obj_id: int, frame_id: int, feat: np.ndarray,
+            probs: np.ndarray, crop: Optional[np.ndarray] = None):
+        self.count += 1
+        a = 1.0 / self.count
+        self.centroid = (1 - a) * self.centroid + a * feat
+        self.mean_probs = (1 - a) * self.mean_probs + a * probs
+        self.members.append(obj_id)
+        self.frames.append(frame_id)
+        if crop is not None and self.count == 1:
+            self.rep_crop = crop
+
+    def topk(self, k: int) -> np.ndarray:
+        k = min(k, len(self.mean_probs))
+        part = np.argpartition(-self.mean_probs, k - 1)[:k]
+        return part[np.argsort(-self.mean_probs[part])]
+
+
+class TopKIndex:
+    """class -> clusters inverted index, built at ingest time."""
+
+    def __init__(self, K: int, n_local_classes: int,
+                 class_map: Optional[ClassMap] = None):
+        self.K = K
+        self.n_local_classes = n_local_classes
+        self.class_map = class_map
+        self.clusters: Dict[int, Cluster] = {}
+        self._inverted: Optional[Dict[int, List[int]]] = None
+
+    # -- ingest-side -----------------------------------------------------------
+
+    def add_cluster(self, cluster: Cluster):
+        self.clusters[cluster.cluster_id] = cluster
+        self._inverted = None
+
+    # -- query-side ------------------------------------------------------------
+
+    def _build(self):
+        inv: Dict[int, List[int]] = {}
+        ranks: Dict[int, Dict[int, int]] = {}
+        for cid, cl in self.clusters.items():
+            for rank, c in enumerate(cl.topk(self.K)):
+                inv.setdefault(int(c), []).append(cid)
+                ranks.setdefault(cid, {})[int(c)] = rank
+        self._inverted = inv
+        self._ranks = ranks
+
+    def lookup(self, global_class: int, Kx: Optional[int] = None) -> List[int]:
+        """Cluster ids whose top-Kx (local) classes include the queried class."""
+        if self._inverted is None:
+            self._build()
+        Kx = Kx or self.K
+        local = (self.class_map.to_local(global_class)
+                 if self.class_map is not None else global_class)
+        cids = self._inverted.get(local, [])
+        return [cid for cid in cids if self._ranks[cid][local] < Kx]
+
+    def frames_of(self, cids: Sequence[int]) -> np.ndarray:
+        out = set()
+        for cid in cids:
+            out.update(self.clusters[cid].frames)
+        return np.array(sorted(out), dtype=np.int64)
+
+    def rep_crops(self, cids: Sequence[int]) -> np.ndarray:
+        return np.stack([self.clusters[cid].rep_crop for cid in cids])
+
+    # -- stats / persistence ---------------------------------------------------
+
+    @property
+    def n_clusters(self) -> int:
+        return len(self.clusters)
+
+    @property
+    def n_objects(self) -> int:
+        return sum(c.count for c in self.clusters.values())
+
+    def summary(self) -> dict:
+        if self._inverted is None:
+            self._build()
+        return {
+            "K": self.K,
+            "n_clusters": self.n_clusters,
+            "n_objects": self.n_objects,
+            "n_classes_indexed": len(self._inverted),
+            "specialized": self.class_map is not None,
+        }
+
+    def save(self, path: str):
+        """Persist index metadata + arrays (MongoDB stand-in, §5)."""
+        meta = {
+            "K": self.K,
+            "n_local_classes": self.n_local_classes,
+            "class_map": (self.class_map.global_ids.tolist()
+                          if self.class_map else None),
+            "clusters": {
+                str(cid): {"count": c.count, "members": c.members,
+                           "frames": c.frames}
+                for cid, c in self.clusters.items()
+            },
+        }
+        arrays = {}
+        for cid, c in self.clusters.items():
+            arrays[f"centroid_{cid}"] = c.centroid
+            arrays[f"probs_{cid}"] = c.mean_probs
+            arrays[f"crop_{cid}"] = c.rep_crop
+        np.savez_compressed(path + ".npz", **arrays)
+        with open(path + ".json", "w") as f:
+            json.dump(meta, f)
+
+    @classmethod
+    def load(cls, path: str) -> "TopKIndex":
+        with open(path + ".json") as f:
+            meta = json.load(f)
+        arrays = np.load(path + ".npz")
+        cmap = (ClassMap(np.array(meta["class_map"]))
+                if meta["class_map"] is not None else None)
+        idx = cls(meta["K"], meta["n_local_classes"], cmap)
+        for cid_s, info in meta["clusters"].items():
+            cid = int(cid_s)
+            cl = Cluster(cid, arrays[f"centroid_{cid}"],
+                         arrays[f"crop_{cid}"], arrays[f"probs_{cid}"],
+                         count=info["count"], members=info["members"],
+                         frames=info["frames"])
+            idx.clusters[cid] = cl
+        return idx

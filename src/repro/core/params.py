@@ -1,0 +1,124 @@
+"""Focus parameter selection (paper §4.4).
+
+Sweeps (CheapCNN_i, K, T) per stream against GT-CNN ground truth on a
+sample, keeps configurations meeting the precision/recall targets, draws the
+Pareto boundary over (ingest cost, query latency), and picks:
+    Balance     — min (ingest + query) total GPU cost   [default]
+    Opt-Ingest  — cheapest ingest among viable configs
+    Opt-Query   — fastest query among viable configs
+
+Two-step search exactly as §4.4: (CheapCNN_i, Ls, K) are chosen against the
+recall target first; T is then tightened until precision passes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.query import (dominant_classes, gt_frames_by_class,
+                              precision_recall)
+from repro.core.ingest import IngestConfig, ingest
+from repro.core.index import TopKIndex
+
+
+@dataclass(frozen=True)
+class Candidate:
+    model_id: str
+    K: int
+    T: float
+
+
+@dataclass
+class ConfigEval:
+    candidate: Candidate
+    precision: float
+    recall: float
+    ingest_flops: float
+    query_flops: float           # avg over dominant classes (latency proxy)
+    n_clusters: int
+    viable: bool = False
+
+    def cost_tuple(self) -> Tuple[float, float]:
+        return (self.ingest_flops, self.query_flops)
+
+
+def _simulate_queries(index: TopKIndex, gt_labels: np.ndarray,
+                      frames: np.ndarray, classes: Sequence[int],
+                      Kx: int, gt_flops: float):
+    """P/R + query cost for each dominant class, using gt labels as the
+    GT-CNN oracle on centroid objects (rep object's gt label IS what GT-CNN
+    would output, by the paper's definition of ground truth)."""
+    gt_by_class = gt_frames_by_class(gt_labels, frames)
+    ps, rs, costs = [], [], []
+    for x in classes:
+        cids = index.lookup(x, Kx)
+        matched = [cid for cid in cids
+                   if gt_labels[index.clusters[cid].members[0]] == x]
+        result = index.frames_of(matched)
+        p, r = precision_recall(result, gt_by_class.get(x, np.array([])))
+        ps.append(p)
+        rs.append(r)
+        costs.append(len(cids) * gt_flops)
+    return float(np.mean(ps)), float(np.mean(rs)), float(np.mean(costs))
+
+
+def sweep(crops: np.ndarray, frames: np.ndarray, gt_labels: np.ndarray,
+          cheap_models: Dict[str, Tuple[Callable, float]],
+          Ks: Sequence[int], Ts: Sequence[float], gt_flops: float,
+          precision_target: float = 0.95, recall_target: float = 0.95,
+          max_clusters: int = 4096, batch_size: int = 512,
+          class_maps: Optional[Dict[str, object]] = None,
+          ) -> List[ConfigEval]:
+    """cheap_models: model_id -> (apply_fn, flops_per_image)."""
+    evals: List[ConfigEval] = []
+    dom = dominant_classes(gt_labels)
+    Kmax = max(Ks)
+    for mid, (apply_fn, flops) in cheap_models.items():
+        cmap = (class_maps or {}).get(mid)
+        for T in Ts:
+            cfg = IngestConfig(K=Kmax, threshold=T,
+                               max_clusters=max_clusters,
+                               batch_size=batch_size)
+            index, stats = ingest(crops, frames, apply_fn, flops, cfg,
+                                  class_map=cmap)
+            for K in Ks:
+                p, r, qcost = _simulate_queries(index, gt_labels, frames,
+                                                dom, K, gt_flops)
+                evals.append(ConfigEval(
+                    Candidate(mid, K, T), precision=p, recall=r,
+                    ingest_flops=stats.cheap_flops, query_flops=qcost,
+                    n_clusters=index.n_clusters,
+                    viable=(p >= precision_target and r >= recall_target)))
+    return evals
+
+
+def pareto_boundary(evals: Sequence[ConfigEval]) -> List[ConfigEval]:
+    """Non-dominated (ingest, query) points among viable configs."""
+    viable = [e for e in evals if e.viable]
+    out = []
+    for e in viable:
+        dominated = any(
+            (o.ingest_flops <= e.ingest_flops
+             and o.query_flops <= e.query_flops
+             and (o.ingest_flops < e.ingest_flops
+                  or o.query_flops < e.query_flops))
+            for o in viable)
+        if not dominated:
+            out.append(e)
+    return sorted(out, key=lambda e: e.ingest_flops)
+
+
+def select(evals: Sequence[ConfigEval], policy: str = "balance",
+           ) -> Optional[ConfigEval]:
+    front = pareto_boundary(evals)
+    if not front:
+        return None
+    if policy == "balance":     # min total GPU cycles (§4.4)
+        return min(front, key=lambda e: e.ingest_flops + e.query_flops)
+    if policy == "opt_ingest":
+        return min(front, key=lambda e: (e.ingest_flops, e.query_flops))
+    if policy == "opt_query":
+        return min(front, key=lambda e: (e.query_flops, e.ingest_flops))
+    raise ValueError(policy)

@@ -1,0 +1,117 @@
+"""Focus query-time pipeline (paper Fig. 4, right; §4.2, §5).
+
+query(class X) -> top-K index lookup -> GT-CNN on cluster *centroids only*
+               -> keep clusters whose centroid classifies as X
+               -> return all member frames of kept clusters
+
+Also provides the two baseline cost models the paper compares against
+(Ingest-all / Query-all, both strengthened with motion detection) and the
+frame-level precision/recall metrics relative to GT-CNN ground truth.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.index import OTHER, TopKIndex
+
+
+@dataclass
+class QueryResult:
+    queried_class: int
+    frames: np.ndarray                 # frame ids returned to the user
+    matched_clusters: List[int]
+    n_candidate_clusters: int
+    n_gt_invocations: int
+    gt_flops: float
+    wall_s: float
+
+
+def query(index: TopKIndex, global_class: int,
+          gt_apply: Callable[[np.ndarray], np.ndarray],
+          gt_flops_per_image: float, Kx: Optional[int] = None,
+          batch_size: int = 256) -> QueryResult:
+    """gt_apply(crops (B,R,R,3)) -> predicted *global* class ids (B,)."""
+    t0 = time.perf_counter()
+    cids = index.lookup(global_class, Kx)
+    matched: List[int] = []
+    n_gt = 0
+    for start in range(0, len(cids), batch_size):
+        chunk = cids[start:start + batch_size]
+        labels = np.asarray(gt_apply(index.rep_crops(chunk)))
+        n_gt += len(chunk)
+        for cid, lab in zip(chunk, labels):
+            if int(lab) == global_class:
+                matched.append(cid)
+    frames = index.frames_of(matched)
+    return QueryResult(
+        queried_class=global_class, frames=frames, matched_clusters=matched,
+        n_candidate_clusters=len(cids), n_gt_invocations=n_gt,
+        gt_flops=n_gt * gt_flops_per_image,
+        wall_s=time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# Ground truth + metrics (frame-level, GT-CNN as oracle — §6.1)
+# ---------------------------------------------------------------------------
+
+def gt_frames_by_class(gt_labels: np.ndarray,
+                       frames: np.ndarray) -> Dict[int, np.ndarray]:
+    """For each class, the sorted frame ids where GT-CNN saw that class."""
+    out: Dict[int, set] = {}
+    for lab, f in zip(gt_labels, frames):
+        out.setdefault(int(lab), set()).add(int(f))
+    return {c: np.array(sorted(s), np.int64) for c, s in out.items()}
+
+
+def precision_recall(result_frames: np.ndarray,
+                     gt_frames: np.ndarray) -> tuple:
+    rs, gs = set(result_frames.tolist()), set(gt_frames.tolist())
+    tp = len(rs & gs)
+    precision = tp / len(rs) if rs else 1.0
+    recall = tp / len(gs) if gs else 1.0
+    return precision, recall
+
+
+def dominant_classes(gt_labels: np.ndarray, top_frac: float = 0.95,
+                     max_classes: int = 20) -> List[int]:
+    """The most frequent classes covering ``top_frac`` of objects (§6.1
+    evaluates all dominant classes of each stream)."""
+    vals, counts = np.unique(gt_labels, return_counts=True)
+    order = np.argsort(-counts)
+    cum = np.cumsum(counts[order]) / counts.sum()
+    cut = int(np.searchsorted(cum, top_frac)) + 1
+    return [int(v) for v in vals[order[:min(cut, max_classes)]]]
+
+
+# ---------------------------------------------------------------------------
+# Baseline cost models (paper §6.1 Baselines)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class BaselineCosts:
+    """Costs in FLOPs (device-independent) for the two baselines.
+
+    Both are strengthened with motion detection: only frames with moving
+    objects are processed (the n_objects stream is already post-detection).
+    """
+    n_objects: int
+    gt_flops_per_image: float
+
+    @property
+    def ingest_all_flops(self) -> float:    # GT-CNN on everything at ingest
+        return self.n_objects * self.gt_flops_per_image
+
+    @property
+    def query_all_flops(self) -> float:     # GT-CNN on everything at query
+        return self.n_objects * self.gt_flops_per_image
+
+
+def gpu_seconds(flops: float, peak_flops: float = 6.1e12,
+                utilization: float = 0.35) -> float:
+    """Convert model FLOPs to GPU-seconds on the paper's GTX Titan X
+    (~6.1 TFLOP/s fp32, ~35% achieved utilization on CNN inference)."""
+    return flops / (peak_flops * utilization)

@@ -1,0 +1,12 @@
+from repro.data.video import (  # noqa: F401
+    STREAM_ZOO,
+    DetectedObject,
+    StreamConfig,
+    VideoStream,
+    get_stream,
+)
+from repro.data.bgsub import (  # noqa: F401
+    BackgroundSubtractor,
+    extract_crops,
+    pixel_difference,
+)

@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (  # noqa: F401
+    act_spec,
+    batch_spec,
+    constrain,
+    mesh_axes,
+    param_shardings,
+    spec_for_param,
+)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for Focus hot spots.
+
+centroid_assign — clustering inner loop (MXU distance + online argmin)
+topk_mask       — top-K class extraction for the ingest index
+flash_attention — blockwise fused attention for the CNN/LM backbones
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd public
+wrapper), ref.py (pure-jnp oracle). Validated in interpret mode on CPU.
+"""

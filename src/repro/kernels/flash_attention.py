@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: blockwise fused attention (online softmax).
+
+Used by the backbone transformers (GT-CNN / LM archs). KV tiles stream
+HBM->VMEM along the innermost grid axis; running (max, denom, acc) live in
+VMEM scratch, so the (S, S) score matrix never exists in HBM — the memory
+term drops from O(S^2) to O(S·dh).
+
+Grid: (B·H, S/bq, S/bk); the kv axis is innermost and revisits the same
+output block, accumulating online-softmax state. Causal tiles strictly above
+the diagonal are skipped via pl.when (half the FLOPs at no accuracy cost).
+
+VMEM budget (bq=bk=128, dh=128, fp32): q/k/v tiles 3·64 KiB, acc 64 KiB,
+scores 64 KiB, m/l 1 KiB << 16 MiB/core.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, bq: int, bk: int, nk: int,
+            s_actual: int):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    run = True
+    if causal:
+        run = ki * bk <= qi * bq + bq - 1   # some kv col <= some q row
+
+    @pl.when(run if causal else True)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)     # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)     # (bk, dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = cols < s_actual
+        if causal:
+            mask &= cols <= rows
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot(p, v,
+                                      preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.where(l == 0, 1.0, l)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128, interpret: bool = True):
+    """q, k, v: (BH, S, dh) -> (BH, S, dh)."""
+    BH, S, dh = q.shape
+    bq = min(bq, S)
+    bk = min(bk, S)
+    Sp = max((S + bq - 1) // bq * bq, (S + bk - 1) // bk * bk)
+    # unify padding so both tilings divide
+    import math
+    lcm = bq * bk // math.gcd(bq, bk)
+    Sp = (S + lcm - 1) // lcm * lcm
+    pad = ((0, 0), (0, Sp - S), (0, 0))
+    qp = jnp.pad(q, pad)
+    kp = jnp.pad(k, pad)
+    vp = jnp.pad(v, pad)
+    nq, nk = Sp // bq, Sp // bk
+    scale = 1.0 / (dh ** 0.5)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, bq=bq, bk=bk,
+                          nk=nk, s_actual=S),
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, dh), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, dh), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sp, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dh), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :S, :]

@@ -1,0 +1,41 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; everywhere else (this CPU container)
+they run in interpret mode, which executes the kernel body with jax ops —
+bit-for-bit the same BlockSpec tiling logic, validated against ref.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import centroid_assign as _ca
+from repro.kernels import flash_attention as _fa
+from repro.kernels import topk_mask as _tk
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def centroid_assign(feats, centroids, *, bb: int = 128, bm: int = 128):
+    """(B, D), (M, D) -> (min squared-L2 (B,), argmin (B,))."""
+    return _ca.centroid_assign(feats, centroids, bb=bb, bm=bm,
+                               interpret=_interpret())
+
+
+def topk(logits, k: int, *, bb: int = 128):
+    """(B, C) -> (values (B, k), indices (B, k)) in descending order."""
+    return _tk.topk(logits, k, bb=bb, interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128):
+    """q, k, v: (B, S, H, dh) -> (B, S, H, dh) fused attention."""
+    B, S, H, dh = q.shape
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+    out = _fa.flash_attention(qt, kt, vt, causal=causal, bq=bq, bk=bk,
+                              interpret=_interpret())
+    return out.reshape(B, H, S, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each kernel's test sweeps shapes/dtypes and asserts allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def centroid_assign_ref(feats, centroids):
+    """feats (B, D), centroids (M, D) -> (min_d2 (B,) f32, argmin (B,) i32).
+
+    Squared L2 distance to the nearest centroid row.
+    """
+    f = feats.astype(jnp.float32)
+    c = centroids.astype(jnp.float32)
+    d2 = (jnp.sum(f * f, axis=1)[:, None]
+          - 2.0 * f @ c.T
+          + jnp.sum(c * c, axis=1)[None, :])
+    j = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    return jnp.take_along_axis(d2, j[:, None].astype(jnp.int32), 1)[:, 0], j
+
+
+def topk_ref(logits, k: int):
+    """logits (B, C) -> (values (B, k) f32, indices (B, k) i32), desc order."""
+    v, i = jax.lax.top_k(logits.astype(jnp.float32), k)
+    return v, i.astype(jnp.int32)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q,k,v: (B, S, H, dh) -> (B, S, H, dh). Plain softmax attention."""
+    S = q.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        scores = jnp.where(mask, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,357 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count on first init); this module is the ONLY place 512 placeholder devices
+exist — tests and benchmarks see 1 CPU device.
+
+Per cell this records: compile success, memory_analysis (proves it fits),
+cost_analysis FLOPs/bytes, the collective schedule parsed from the
+partitioned HLO, and the three roofline terms (EXPERIMENTS.md §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun \
+      --arch all --shape all --mesh both --out experiments/dryrun
+"""
+import argparse
+import json
+import math
+import re
+import time
+import traceback
+
+import jax
+
+from repro.common.config import DiTConfig, LMConfig, ShapeCell, ViTConfig
+from repro.configs import ARCH_IDS, get_arch, get_shapes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build
+
+# --- TPU v5e hardware constants (roofline denominators) --------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],{}\s/]+?\)?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-device wire bytes by collective kind, from partitioned HLO.
+
+    Ring-algorithm wire-cost model per participating device with group
+    size k and result bytes R:
+      all-gather: R(k-1)/k   all-reduce: 2R(k-1)/k
+      reduce-scatter: R(k-1) all-to-all: R(k-1)/k  permute: R
+    """
+    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    counts = dict.fromkeys(out, 0)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue            # async pair: count the -start only
+        shape_text, kind = m.group(1), m.group(2)
+        r = _shape_bytes(shape_text)
+        k = 1
+        g = _GROUPS_RE.search(line)
+        if g:
+            k = int(g.group(2))
+        else:
+            g2 = _GROUPS_LIST_RE.search(line)
+            if g2:
+                k = len(g2.group(1).split(","))
+        if k <= 1:
+            factor = 0.0
+        elif kind == "all-reduce":
+            factor = 2.0 * (k - 1) / k
+        elif kind == "reduce-scatter":
+            factor = float(k - 1)
+        elif kind == "collective-permute":
+            factor = 1.0
+        else:
+            factor = (k - 1) / k
+        out[kind] += r * factor
+        counts[kind] += 1
+    return {"wire_bytes": out, "counts": counts,
+            "total_wire_bytes": sum(out.values())}
+
+
+def _measure(spec) -> dict:
+    """Compile a StepSpec and read per-device flops / bytes / wire bytes."""
+    with_mesh = spec.in_shardings  # shardings carry the mesh
+    lowered = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                      out_shardings=spec.out_shardings,
+                      donate_argnums=spec.donate_argnums).lower(*spec.args)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    coll = collective_stats(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "wire": coll["total_wire_bytes"],
+            "coll": coll}
+
+
+def estimate_costs(arch_id: str, cell_name: str, mesh, variant=None,
+                   cfg_overrides=None):
+    """Accurate per-device cost terms via two-point layer extrapolation.
+
+    XLA's HloCostAnalysis counts a while-loop body ONCE, so the scanned
+    full-depth compile undercounts FLOPs/bytes by ~L×. We therefore compile
+    the same cell UNROLLED at n_layers=1 and n_layers=2 and extrapolate
+    linearly: F(L) = F(1) + (L-1)·(F(2)-F(1)). The intercept captures
+    embeddings/head/optimizer-outer work, the slope the per-layer work.
+    DiT gen cells additionally scale by the sampler step count (the sampler
+    is measured at steps=1). EfficientNet has no scan — measured directly.
+    """
+    import dataclasses as dc
+
+    from repro.launch import steps as st
+
+    cfg = get_arch(arch_id)
+    if cfg_overrides:
+        cfg = dc.replace(cfg, **cfg_overrides)
+    cell = get_shapes(arch_id)[cell_name]
+    if not hasattr(cfg, "scan_layers"):
+        return None                      # effnet: direct measurement is exact
+
+    recs = []
+    for L in (1, 2):
+        vcfg = dc.replace(cfg, n_layers=L, scan_layers=False)
+        if isinstance(cfg, LMConfig):
+            if cell.kind == "long" and variant == "window":
+                vcfg = dc.replace(vcfg, attention="window", window=8192)
+            spec = st.build_lm(vcfg, cell, mesh)
+        elif isinstance(cfg, DiTConfig):
+            vcell = (dc.replace(cell, steps=1)
+                     if cell.kind == "dit_gen" else cell)
+            spec = st.build_dit(vcfg, vcell, mesh)
+        else:
+            spec = st.build_vit(vcfg, cell, mesh)
+        with mesh:
+            recs.append(_measure(spec))
+
+    L = cfg.n_layers
+
+    def extrap(key):
+        slope = max(recs[1][key] - recs[0][key], 0.0)
+        return recs[0][key] + (L - 1) * slope
+
+    out = {k: extrap(k) for k in ("flops", "bytes", "wire")}
+    coll_kinds = {}
+    for kind in recs[0]["coll"]["wire_bytes"]:
+        a = recs[0]["coll"]["wire_bytes"][kind]
+        b = recs[1]["coll"]["wire_bytes"][kind]
+        coll_kinds[kind] = a + (L - 1) * max(b - a, 0.0)
+    out["wire_by_kind"] = coll_kinds
+    if isinstance(cfg, DiTConfig) and cell.kind == "dit_gen":
+        for k in ("flops", "bytes", "wire"):
+            out[k] *= cell.steps
+        out["wire_by_kind"] = {k: v * cell.steps
+                               for k, v in coll_kinds.items()}
+    # Microbatched train steps: the accumulation scan body is counted once by
+    # HloCostAnalysis; scale by n_mb (slightly overcounts the optimizer's
+    # outer work, which runs once per step — small and conservative).
+    n_mb = getattr(cfg, "train_microbatches", 1)
+    if cell.kind == "train" and n_mb > 1:
+        for k in ("flops", "bytes", "wire"):
+            out[k] *= n_mb
+        out["wire_by_kind"] = {k: v * n_mb
+                               for k, v in out["wire_by_kind"].items()}
+    out["method"] = "unrolled-2pt-extrapolation"
+    return out
+
+
+def model_flops(arch_id: str, cell: ShapeCell) -> float:
+    """Reference useful work: 6·N·D train / 2·N·D inference (N = active)."""
+    cfg = get_arch(arch_id)
+    n = cfg.n_active_params()
+    if isinstance(cfg, LMConfig):
+        tokens = cell.global_batch * max(cell.seq_len, 1)
+        if cell.kind == "train":
+            return 6.0 * n * tokens
+        if cell.kind == "prefill":
+            return 2.0 * n * tokens
+        return 2.0 * n * cell.global_batch          # decode: 1 new token
+    if isinstance(cfg, DiTConfig):
+        toks = cell.global_batch * cfg.n_tokens(cell.img_res)
+        if cell.kind == "dit_train":
+            return 6.0 * n * toks
+        return 2.0 * n * toks * cell.steps
+    # vision
+    if isinstance(cfg, ViTConfig):
+        fwd = 2.0 * n * cell.global_batch * cfg.n_tokens(cell.img_res)
+    else:
+        from repro.models.efficientnet import flops_per_image
+        fwd = float(flops_per_image(cfg, cell.img_res)) * cell.global_batch
+    return 3.0 * fwd if cell.kind == "cls" else fwd
+
+
+def run_cell(arch_id: str, cell_name: str, multi_pod: bool,
+             variant=None, cfg_overrides=None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = math.prod(mesh.shape.values())
+    cell = get_shapes(arch_id)[cell_name]
+    rec = {"arch": arch_id, "cell": cell_name, "variant": variant,
+           "overrides": cfg_overrides,
+           "mesh": dict(mesh.shape), "n_chips": n_chips, "ok": False}
+
+    spec = build(arch_id, cell_name, mesh, variant=variant,
+                 cfg_overrides=cfg_overrides)
+    if spec.skip_reason:
+        rec.update(skipped=True, skip_reason=spec.skip_reason, ok=True)
+        return rec
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(
+            spec.fn, in_shardings=spec.in_shardings,
+            out_shardings=spec.out_shardings,
+            donate_argnums=spec.donate_argnums).lower(*spec.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    mem = {}
+    if ma is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            mem[f] = getattr(ma, f, 0)
+        live = (mem.get("argument_size_in_bytes", 0)
+                + mem.get("temp_size_in_bytes", 0)
+                + mem.get("output_size_in_bytes", 0)
+                - mem.get("alias_size_in_bytes", 0))
+        mem["live_bytes_per_device"] = live
+        mem["fits_16gb_hbm"] = bool(live < 16e9)
+
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    rec["scanned_raw"] = {          # as-compiled numbers (loop bodies 1x)
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "wire_bytes": coll["total_wire_bytes"],
+        "collective_counts": coll["counts"],
+    }
+
+    est = estimate_costs(arch_id, cell_name, mesh, variant=variant,
+                         cfg_overrides=cfg_overrides)
+    if est is not None:
+        flops_dev, bytes_dev = est["flops"], est["bytes"]
+        wire_dev = est["wire"]
+        coll = {"wire_bytes": est["wire_by_kind"], "counts": coll["counts"],
+                "total_wire_bytes": wire_dev, "method": est["method"]}
+    else:
+        flops_dev = float(ca.get("flops", 0.0))
+        bytes_dev = float(ca.get("bytes accessed", 0.0))
+        wire_dev = coll["total_wire_bytes"]
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = wire_dev / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(arch_id, cell)
+    hlo_total_flops = flops_dev * n_chips
+    rec.update(
+        ok=True, lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory=mem,
+        flops_per_device=flops_dev, bytes_per_device=bytes_dev,
+        collectives=coll,
+        roofline={**terms, "dominant": dominant,
+                  "bound_step_s": max(terms.values())},
+        model_flops=mf, hlo_total_flops=hlo_total_flops,
+        useful_flops_ratio=(mf / hlo_total_flops if hlo_total_flops else 0.0),
+        roofline_fraction=(
+            (mf / n_chips / PEAK_FLOPS) / max(terms.values())
+            if max(terms.values()) > 0 else 0.0),
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    n_fail = 0
+    for arch in archs:
+        shapes = (list(get_shapes(arch)) if args.shape == "all"
+                  else args.shape.split(","))
+        for cell in shapes:
+            for mp in meshes:
+                tag = "multi" if mp else "single"
+                suffix = f"_{args.variant}" if args.variant else ""
+                path = os.path.join(args.out,
+                                    f"{arch}_{cell}_{tag}{suffix}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {path}")
+                    continue
+                print(f"[dryrun] {arch} x {cell} x {tag} ...", flush=True)
+                try:
+                    rec = run_cell(arch, cell, mp, variant=args.variant)
+                except Exception as e:
+                    rec = {"arch": arch, "cell": cell, "variant": args.variant,
+                           "mesh_tag": tag, "ok": False, "error": str(e),
+                           "traceback": traceback.format_exc()}
+                    n_fail += 1
+                    print(f"  FAILED: {e}")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec.get("ok") and not rec.get("skipped"):
+                    r = rec["roofline"]
+                    print(f"  ok compile={rec['compile_s']}s "
+                          f"flops/dev={rec['flops_per_device']:.3g} "
+                          f"dom={r['dominant']} "
+                          f"roofline_frac={rec['roofline_fraction']:.3f}",
+                          flush=True)
+                elif rec.get("skipped"):
+                    print(f"  skipped: {rec['skip_reason'][:60]}")
+    print(f"done, failures={n_fail}")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

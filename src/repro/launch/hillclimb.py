@@ -1,0 +1,70 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimb harness (§Perf methodology).
+
+Re-lowers ONE (arch x shape) cell with config overrides and prints the
+before/after roofline terms — the measurement step of the
+hypothesis -> change -> measure -> validate loop.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb \
+      --cell olmo-1b:train_4k \
+      --set act_sharding=dp train_microbatches=2 --tag no-sp
+"""
+import argparse
+import json
+
+
+def parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("true", "false"):
+        return k, v == "true"
+    return k, v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--set", nargs="*", default=[], dest="overrides")
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tag", default="exp")
+    ap.add_argument("--out", default="experiments/hillclimb")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_cell
+
+    arch, cell = args.cell.split(":")
+    overrides = dict(parse_override(kv) for kv in args.overrides) or None
+    rec = run_cell(arch, cell, args.multi_pod, variant=args.variant,
+                   cfg_overrides=overrides)
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, f"{arch}_{cell}_{args.tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+    if rec.get("ok") and not rec.get("skipped"):
+        r = rec["roofline"]
+        m = rec["memory"]
+        print(f"cell={args.cell} overrides={overrides}")
+        print(f"  compute={r['compute_s']:.3f}s memory={r['memory_s']:.3f}s "
+              f"collective={r['collective_s']:.3f}s dom={r['dominant']}")
+        print(f"  bound_step={r['bound_step_s']:.3f}s "
+              f"roofline_frac={rec['roofline_fraction']:.4f} "
+              f"useful={rec['useful_flops_ratio']:.3f}")
+        print(f"  mem={m['live_bytes_per_device']/1e9:.2f}GB "
+              f"fits={m['fits_16gb_hbm']} compile={rec['compile_s']}s")
+        print(f"  wire: " + ", ".join(
+            f"{k}={v/1e9:.1f}GB"
+            for k, v in rec["collectives"]["wire_bytes"].items() if v))
+    else:
+        print(json.dumps(rec, indent=1)[:2000])
+
+
+if __name__ == "__main__":
+    main()

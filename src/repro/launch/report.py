@@ -1,0 +1,89 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from the per-cell
+JSON records written by repro.launch.dryrun.
+
+  PYTHONPATH=src python -m repro.launch.report experiments/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(dirpath: str):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        r = json.load(open(f))
+        tag = "multi" if (r.get("mesh", {}).get("pod") or
+                          "multi" in os.path.basename(f)) else "single"
+        r["mesh_tag"] = tag
+        r["file"] = os.path.basename(f)
+        recs.append(r)
+    return recs
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def dryrun_table(recs):
+    print("| arch | cell | mesh | status | compile | GB/dev | fits 16GB | "
+          "collectives (AG/AR/RS/A2A/CP) |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        arch, cell = r.get("arch"), r.get("cell")
+        tag = r["mesh_tag"]
+        var = f" ({r['variant']})" if r.get("variant") else ""
+        if r.get("skipped"):
+            print(f"| {arch} | {cell}{var} | {tag} | SKIP (full-attn, "
+                  f"see DESIGN.md) | | | | |")
+            continue
+        if not r.get("ok"):
+            print(f"| {arch} | {cell}{var} | {tag} | **FAIL**: "
+                  f"{r.get('error','')[:60]} | | | | |")
+            continue
+        m = r.get("memory", {})
+        live = m.get("live_bytes_per_device", 0) / 1e9
+        fits = "yes" if m.get("fits_16gb_hbm") else "**NO**"
+        c = r.get("scanned_raw", {}).get("collective_counts", {})
+        cc = (f"{c.get('all-gather',0)}/{c.get('all-reduce',0)}"
+              f"/{c.get('reduce-scatter',0)}/{c.get('all-to-all',0)}"
+              f"/{c.get('collective-permute',0)}")
+        print(f"| {arch} | {cell}{var} | {tag} | ok | {r['compile_s']}s | "
+              f"{live:.1f} | {fits} | {cc} |")
+
+
+def roofline_table(recs):
+    print("| arch | cell | compute | memory | collective | dominant | "
+          "bound/step | MODEL_FLOPS | useful ratio | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["mesh_tag"] != "single" or r.get("skipped") or not r.get("ok"):
+            continue
+        rl = r["roofline"]
+        var = f" ({r['variant']})" if r.get("variant") else ""
+        print(f"| {r['arch']} | {r['cell']}{var} | {fmt_s(rl['compute_s'])} | "
+              f"{fmt_s(rl['memory_s'])} | {fmt_s(rl['collective_s'])} | "
+              f"**{rl['dominant'].replace('_s','')}** | "
+              f"{fmt_s(rl['bound_step_s'])} | {r['model_flops']:.3g} | "
+              f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    recs = load(d)
+    n_ok = sum(1 for r in recs if r.get("ok"))
+    n_skip = sum(1 for r in recs if r.get("skipped"))
+    print(f"<!-- {len(recs)} cells: {n_ok} ok ({n_skip} documented skips), "
+          f"{len(recs)-n_ok} failed -->\n")
+    print("### Dry-run matrix\n")
+    dryrun_table(recs)
+    print("\n### Roofline (single-pod 16x16, per device)\n")
+    roofline_table(recs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""End-to-end Focus serving driver (the paper's deployment shape, §5).
+
+Pipeline per stream: sample -> GT-label -> specialize cheap CNN ->
+parameter selection (§4.4) -> ingest (index+clusters) -> serve queries.
+Query workers batch centroid classifications; per-query latency and cost
+are reported against the Ingest-all / Query-all baselines.
+
+  PYTHONPATH=src python -m repro.launch.serve --stream lausanne \
+      --policy balance --duration 60
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.ingest import IngestConfig, ingest
+from repro.core.params import select, sweep
+from repro.core.query import (dominant_classes, gpu_seconds,
+                              gt_frames_by_class, precision_recall, query)
+from repro.data import get_stream
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--stream", default="lausanne")
+    ap.add_argument("--policy", default="balance",
+                    choices=["balance", "opt_ingest", "opt_query"])
+    ap.add_argument("--duration", type=int, default=60)
+    ap.add_argument("--fps", type=int, default=10)
+    ap.add_argument("--ls", type=int, default=6)
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--index-out", default=None)
+    args = ap.parse_args()
+
+    from benchmarks.common import (GT_FLOPS, SPECIALIZED_FAMILY, get_model,
+                                   gt_oracle)
+
+    vs = get_stream(args.stream, duration_s=args.duration, fps=args.fps)
+    crops, frames, tracks, labels = vs.objects_array()
+    print(f"[serve] stream={args.stream} objects={len(crops)} "
+          f"classes={len(np.unique(labels))}")
+
+    # §4.4 parameter selection over the specialized family
+    models, cmaps = {}, {}
+    for mid in SPECIALIZED_FAMILY:
+        apply_fn, acc_flops, cmap = get_model(args.stream, mid, crops,
+                                              labels, args.duration,
+                                              steps=args.steps, Ls=args.ls)
+        models[mid] = (apply_fn, acc_flops)
+        cmaps[mid] = cmap
+    evals = sweep(crops, frames, labels, models, Ks=[1, 2, 4], Ts=[0.5, 0.8],
+                  gt_flops=GT_FLOPS, class_maps=cmaps, max_clusters=2048)
+    choice = select(evals, args.policy) or max(
+        evals, key=lambda e: (e.recall, e.precision))
+    print(f"[serve] policy={args.policy} -> model={choice.candidate.model_id}"
+          f" K={choice.candidate.K} T={choice.candidate.T} "
+          f"(P={choice.precision:.3f} R={choice.recall:.3f})")
+
+    # ingest with the chosen config
+    mid = choice.candidate.model_id
+    t0 = time.perf_counter()
+    index, stats = ingest(crops, frames, models[mid][0], models[mid][1],
+                          IngestConfig(K=choice.candidate.K,
+                                       threshold=choice.candidate.T,
+                                       max_clusters=2048),
+                          class_map=cmaps[mid])
+    print(f"[serve] ingest: {index.n_clusters} clusters / "
+          f"{index.n_objects} objects in {time.perf_counter()-t0:.1f}s "
+          f"(GPU-cost {gpu_seconds(stats.cheap_flops):.1f} GPU-s vs "
+          f"Ingest-all {gpu_seconds(len(crops)*GT_FLOPS):.1f} GPU-s)")
+    if args.index_out:
+        index.save(args.index_out)
+        print(f"[serve] index persisted to {args.index_out}.(json|npz)")
+
+    # serve queries for every dominant class
+    gt_apply = gt_oracle(labels)
+    gtf = gt_frames_by_class(labels, frames)
+    ps, rs = [], []
+    for x in dominant_classes(labels):
+        res = query(index, int(x), gt_apply, GT_FLOPS)
+        p, r = precision_recall(res.frames, gtf.get(int(x), np.array([])))
+        ps.append(p)
+        rs.append(r)
+        print(f"  query class={x:4d}: {len(res.frames):5d} frames, "
+              f"{res.n_gt_invocations:4d} GT-CNN calls "
+              f"({gpu_seconds(res.gt_flops)*1e3:8.1f} GPU-ms vs Query-all "
+              f"{gpu_seconds(len(crops)*GT_FLOPS)*1e3:8.1f} GPU-ms) "
+              f"P={p:.3f} R={r:.3f} wall={res.wall_s*1e3:.0f}ms")
+    print(f"[serve] avg P={np.mean(ps):.3f} R={np.mean(rs):.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

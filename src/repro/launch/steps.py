@@ -1,0 +1,466 @@
+"""Step builders: (arch, shape-cell, mesh) -> jit-able step + ShapeDtypeStruct
+inputs + shardings. Shared by the dry-run, the trainer and the server.
+
+Every builder returns a StepSpec whose ``args`` are ShapeDtypeStruct
+stand-ins (weak-type-correct, shardable, no device allocation) — lowering
+via jax.jit(fn, in_shardings=...).lower(*args) never touches device memory.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.config import (DiTConfig, EffNetConfig, LMConfig, ShapeCell,
+                                 ViTConfig)
+from repro.configs import get_arch, get_shapes
+from repro.distributed import param_shardings
+from repro.models import dit, efficientnet, transformer, vit
+from repro.train import optimizer as opt
+
+OPT_CFG = opt.OptConfig(lr=3e-4, warmup_steps=2000, total_steps=100000)
+
+
+@dataclass
+class StepSpec:
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]          # pytrees of ShapeDtypeStruct
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+    skip_reason: Optional[str] = None   # set for inapplicable cells
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dp_axes(mesh: Mesh, batch: int):
+    """Largest (pod,data)-combination that divides the batch, else None."""
+    names = [n for n in ("pod", "data") if n in mesh.axis_names]
+    cands = []
+    if len(names) == 2:
+        cands.append(tuple(names))
+    cands += [(n,) for n in names]
+    for c in sorted(cands, key=lambda c: -math.prod(mesh.shape[n] for n in c)):
+        if batch % math.prod(mesh.shape[n] for n in c) == 0:
+            return c if len(c) > 1 else c[0]
+    return None
+
+
+def _ns(mesh, *spec):
+    return NamedSharding(mesh, P(*spec))
+
+
+def _all_axes(mesh: Mesh):
+    return tuple(mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def _lm_param_shapes(cfg: LMConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda: transformer.init(key, cfg))
+
+
+def _cache_sharding(cfg: LMConfig, cell: ShapeCell, mesh: Mesh):
+    """(L, B, S, KV, hd) cache: batch over dp; model axis over KV heads when
+    divisible, else sequence (SP — MQA/GQA with few heads, long caches)."""
+    dp = _dp_axes(mesh, cell.global_batch)
+    m = mesh.shape["model"]
+    if cell.kind == "long":
+        # B=1: spend every axis on sequence
+        axes = _all_axes(mesh)
+        if cell.seq_len % math.prod(mesh.shape[a] for a in axes) == 0:
+            return _ns(mesh, None, None, axes, None, None)
+    if cfg.n_kv_heads % m == 0:
+        return _ns(mesh, None, dp, None, "model", None)
+    if cell.seq_len % m == 0:
+        return _ns(mesh, None, dp, "model", None, None)
+    return _ns(mesh, None, dp, None, None, None)
+
+
+def _zero1_shardings(o_shapes, mesh: Mesh):
+    """Shard AdamW m/v over as much of the mesh as divides the leading dim
+    (ZeRO-1); scalars replicated."""
+    axes = _all_axes(mesh)
+
+    def visit(leaf):
+        for cand in (axes, axes[:-1], axes[-1:]):
+            size = math.prod(mesh.shape[a] for a in cand) if cand else 1
+            if leaf.ndim >= 1 and leaf.shape[0] % size == 0 and size > 1:
+                return _ns(mesh, cand if len(cand) > 1 else cand[0],
+                           *([None] * (leaf.ndim - 1)))
+        return _ns(mesh)
+
+    return jax.tree.map(visit, o_shapes)
+
+
+def build_lm(cfg: LMConfig, cell: ShapeCell, mesh: Mesh) -> StepSpec:
+    import dataclasses as _dc
+
+    if cell.kind == "long" and cfg.attention == "full":
+        # Paper-faithful configs are pure full attention -> skip per
+        # instructions; the window variant is built via build_lm_long_window.
+        return StepSpec(
+            name=f"{cfg.name}:{cell.name}", fn=None, args=(),
+            in_shardings=(), out_shardings=None,
+            skip_reason=("pure full-attention arch; long_500k requires "
+                         "sub-quadratic attention (DESIGN.md). Window-"
+                         "attention variant reported separately."))
+
+    p_shapes = _lm_param_shapes(cfg)
+    ddp = getattr(cfg, "parallelism", "fsdp_tp") == "ddp_zero1"
+    if ddp:
+        # ZeRO-1 for small models: params REPLICATED (no per-layer weight
+        # gathers, no TP activation reduces); only the optimizer moments are
+        # sharded; the batch spreads over EVERY mesh axis.
+        p_shard = jax.tree.map(lambda _: _ns(mesh), p_shapes)
+    else:
+        p_shard = param_shardings(p_shapes, mesh, scan_layers=True)
+    B, S = cell.global_batch, cell.seq_len
+    dp = _dp_axes(mesh, B)
+    if ddp:
+        all_ax = _all_axes(mesh)
+        if B % math.prod(mesh.shape[a] for a in all_ax) == 0:
+            dp = all_ax
+    model_mesh = None if ddp else mesh   # no activation constraints in DDP
+
+    if cell.kind == "train":
+        o_shapes = jax.eval_shape(opt.init, p_shapes)
+        if ddp:
+            o_shard = _zero1_shardings(o_shapes, mesh)
+        else:
+            o_shard = param_shardings(o_shapes, mesh, scan_layers=True)
+        batch = {"tokens": _sds((B, S), jnp.int32),
+                 "labels": _sds((B, S), jnp.int32)}
+        b_shard = {"tokens": _ns(mesh, dp, None),
+                   "labels": _ns(mesh, dp, None)}
+
+        n_mb = max(1, cfg.train_microbatches)
+        g_dtype = {"f32": jnp.float32, "bf16": jnp.bfloat16}[
+            getattr(cfg, "grad_reduce_dtype", "f32")]
+
+        def train_step(params, opt_state, batch):
+            def loss(p, toks, labs):
+                return transformer.loss_fn(p, toks, labs, cfg,
+                                           mesh=model_mesh)
+
+            if n_mb == 1:
+                (l, _), grads = jax.value_and_grad(loss, has_aux=True)(
+                    params, batch["tokens"], batch["labels"])
+            else:
+                # grad accumulation: peak activation memory / n_mb
+                mbs = jax.tree.map(
+                    lambda x: x.reshape((n_mb, x.shape[0] // n_mb)
+                                        + x.shape[1:]), batch)
+
+                def acc(carry, mb):
+                    g_acc, l_acc = carry
+                    (l, _), g = jax.value_and_grad(loss, has_aux=True)(
+                        params, mb["tokens"], mb["labels"])
+                    g_acc = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                    return (g_acc, l_acc + l), ()
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, l), _ = jax.lax.scan(
+                    acc, (g0, jnp.zeros((), jnp.float32)), mbs)
+                grads = jax.tree.map(lambda g: g / n_mb, grads)
+                l = l / n_mb
+            # wire-format cast: the cross-replica reduce (and, under ZeRO-1,
+            # the grad slice each shard reads) moves bf16 instead of f32.
+            grads = jax.tree.map(lambda g: g.astype(g_dtype), grads)
+            params, opt_state, _ = opt.update(params, grads, opt_state,
+                                              OPT_CFG)
+            return params, opt_state, l
+
+        return StepSpec(
+            name=f"{cfg.name}:{cell.name}", fn=train_step,
+            args=(p_shapes, o_shapes, batch),
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, _ns(mesh)),
+            donate_argnums=(0, 1))
+
+    if cell.kind == "prefill":
+        import dataclasses as _dcc
+        batch = _sds((B, S), jnp.int32)
+        n_bc = cfg.prefill_batch_chunks or 1
+        if cfg.prefill_batch_chunks == 0 and cfg.d_model >= 6144 \
+                and S >= 32768:
+            # long-prefill recipe (see EXPERIMENTS.md §Perf): dp residuals +
+            # 1k query chunks + batch halves keep the live set under 16 GB
+            cfg = _dcc.replace(cfg, act_sharding="dp", attn_q_chunk=1024)
+            n_bc = 2 if B % 2 == 0 else 1
+        while B % n_bc:
+            n_bc -= 1
+
+        def serve_step(params, tokens):
+            if n_bc == 1:
+                return transformer.prefill(params, tokens, cfg,
+                                           mesh=model_mesh)
+            # serialize the batch in chunks (barrier-chained) to halve the
+            # live activation set of very long prefills
+            outs = []
+            prev = None
+            bs = B // n_bc
+            for i in range(n_bc):
+                blk = tokens[i * bs:(i + 1) * bs]
+                if prev is not None:
+                    blk, _ = jax.lax.optimization_barrier((blk, prev))
+                prev = transformer.prefill(params, blk, cfg, mesh=model_mesh)
+                outs.append(prev)
+            return jnp.concatenate(outs, axis=0)
+
+        return StepSpec(
+            name=f"{cfg.name}:{cell.name}", fn=serve_step,
+            args=(p_shapes, batch),
+            in_shardings=(p_shard, _ns(mesh, dp, None)),
+            out_shardings=_ns(mesh, dp, None, None if ddp else "model"))
+
+    if cell.kind in ("decode", "long"):
+        c_shapes = jax.eval_shape(
+            lambda: transformer.init_cache(cfg, B, S))
+        c_shard = jax.tree.map(lambda _: _cache_sharding(cfg, cell, mesh),
+                               c_shapes)
+        token = _sds((B, 1), jnp.int32)
+        clen = _sds((), jnp.int32)
+
+        def serve_step(params, cache, token, cache_len):
+            return transformer.decode_step(params, cache, token, cache_len,
+                                           cfg, mesh=model_mesh)
+
+        return StepSpec(
+            name=f"{cfg.name}:{cell.name}", fn=serve_step,
+            args=(p_shapes, c_shapes, token, clen),
+            in_shardings=(p_shard, c_shard, _ns(mesh, dp, None), _ns(mesh)),
+            out_shardings=(_ns(mesh, dp, None, None if ddp else "model"),
+                           c_shard),
+            donate_argnums=(1,))
+
+    raise ValueError(cell.kind)
+
+
+def build_lm_long_window(cfg: LMConfig, cell: ShapeCell, mesh: Mesh,
+                         window: int = 8192) -> StepSpec:
+    """Beyond-paper variant: sliding-window attention so long_500k lowers."""
+    import dataclasses as _dc
+    wcfg = _dc.replace(cfg, attention="window", window=window,
+                       name=cfg.name + f"-win{window}")
+    spec = build_lm(wcfg, cell, mesh)
+    spec.name = f"{cfg.name}:{cell.name}:window{window}"
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# DiT family
+# ---------------------------------------------------------------------------
+
+def build_dit(cfg: DiTConfig, cell: ShapeCell, mesh: Mesh) -> StepSpec:
+    key = jax.random.PRNGKey(0)
+    p_shapes = jax.eval_shape(lambda: dit.init(key, cfg))
+    p_shard = param_shardings(p_shapes, mesh, scan_layers=True)
+    B = cell.global_batch
+    res = cell.img_res // cfg.vae_factor
+    dp = _dp_axes(mesh, B)
+    seed = _sds((2,), jnp.uint32)
+
+    if cell.kind == "dit_train":
+        o_shapes = jax.eval_shape(opt.init, p_shapes)
+        o_shard = param_shardings(o_shapes, mesh, scan_layers=True)
+        batch = {"latents": _sds((B, res, res, cfg.latent_channels),
+                                 jnp.float32),
+                 "labels": _sds((B,), jnp.int32)}
+        b_shard = {"latents": _ns(mesh, dp, None, None, None),
+                   "labels": _ns(mesh, dp)}
+
+        def train_step(params, opt_state, batch, seed):
+            rng = jax.random.wrap_key_data(seed)
+
+            def loss(p):
+                return dit.loss_fn(p, batch["latents"], batch["labels"], rng,
+                                   cfg, mesh=mesh)
+            (l, _), grads = jax.value_and_grad(loss, has_aux=True)(params)
+            params, opt_state, _ = opt.update(params, grads, opt_state,
+                                              OPT_CFG)
+            return params, opt_state, l
+
+        return StepSpec(
+            name=f"{cfg.name}:{cell.name}", fn=train_step,
+            args=(p_shapes, o_shapes, batch, seed),
+            in_shardings=(p_shard, o_shard, b_shard, _ns(mesh, None)),
+            out_shardings=(p_shard, o_shard, _ns(mesh)),
+            donate_argnums=(0, 1))
+
+    if cell.kind == "dit_gen":
+        labels = _sds((B,), jnp.int32)
+
+        def serve_step(params, labels, seed):
+            rng = jax.random.wrap_key_data(seed)
+            return dit.sample(params, rng, labels, cfg,
+                              img_res=cell.img_res, n_steps=cell.steps,
+                              mesh=mesh)
+
+        return StepSpec(
+            name=f"{cfg.name}:{cell.name}", fn=serve_step,
+            args=(p_shapes, labels, seed),
+            in_shardings=(p_shard, _ns(mesh, dp), _ns(mesh, None)),
+            out_shardings=_ns(mesh, dp, None, None, None))
+
+    raise ValueError(cell.kind)
+
+
+# ---------------------------------------------------------------------------
+# Vision family (ViT / DeiT / EfficientNet)
+# ---------------------------------------------------------------------------
+
+def build_vit(cfg: ViTConfig, cell: ShapeCell, mesh: Mesh) -> StepSpec:
+    key = jax.random.PRNGKey(0)
+    p_shapes = jax.eval_shape(lambda: vit.init(key, cfg))
+    p_shard = param_shardings(p_shapes, mesh, scan_layers=True)
+    B, R = cell.global_batch, cell.img_res
+    dp = _dp_axes(mesh, B)
+    images = _sds((B, R, R, 3), jnp.float32)
+    img_shard = _ns(mesh, dp, None, None, None)
+
+    if cell.kind == "cls":
+        o_shapes = jax.eval_shape(opt.init, p_shapes)
+        o_shard = param_shardings(o_shapes, mesh, scan_layers=True)
+        batch = {"images": images, "labels": _sds((B,), jnp.int32)}
+        b_shard = {"images": img_shard, "labels": _ns(mesh, dp)}
+
+        def train_step(params, opt_state, batch):
+            def loss(p):
+                return vit.loss_fn(p, batch["images"], batch["labels"], cfg,
+                                   mesh=mesh)
+            (l, _), grads = jax.value_and_grad(loss, has_aux=True)(params)
+            params, opt_state, _ = opt.update(params, grads, opt_state,
+                                              OPT_CFG)
+            return params, opt_state, l
+
+        return StepSpec(
+            name=f"{cfg.name}:{cell.name}", fn=train_step,
+            args=(p_shapes, o_shapes, batch),
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, _ns(mesh)),
+            donate_argnums=(0, 1))
+
+    if cell.kind == "serve":
+        if getattr(cfg, "serve_pure_dp", False):
+            # Pure-DP serving: weights replicated (vit-l16 is 0.6 GB bf16),
+            # batch padded up to the full chip count and spread over EVERY
+            # axis -> zero per-layer collectives; one small resharding
+            # collective for the pad/spread at entry.
+            n_chips = math.prod(mesh.shape.values())
+            pad_to = ((B + n_chips - 1) // n_chips) * n_chips
+            p_repl = jax.tree.map(lambda _: _ns(mesh), p_shapes)
+            axes = _all_axes(mesh)
+
+            def serve_step(params, images):
+                x = jnp.pad(images, ((0, pad_to - B), (0, 0), (0, 0), (0, 0)))
+                x = jax.lax.with_sharding_constraint(
+                    x, _ns(mesh, axes, None, None, None))
+                logits = vit.forward(params, x, cfg, mesh=None)
+                return logits[:B]
+
+            return StepSpec(
+                name=f"{cfg.name}:{cell.name}", fn=serve_step,
+                args=(p_shapes, images),
+                in_shardings=(p_repl, img_shard),
+                out_shardings=_ns(mesh, dp, None))
+
+        def serve_step(params, images):
+            return vit.forward(params, images, cfg, mesh=mesh)
+
+        return StepSpec(
+            name=f"{cfg.name}:{cell.name}", fn=serve_step,
+            args=(p_shapes, images),
+            in_shardings=(p_shard, img_shard),
+            out_shardings=_ns(mesh, dp, None))
+
+    raise ValueError(cell.kind)
+
+
+def build_effnet(cfg: EffNetConfig, cell: ShapeCell, mesh: Mesh) -> StepSpec:
+    key = jax.random.PRNGKey(0)
+    ps_shapes = jax.eval_shape(lambda: efficientnet.init(key, cfg))
+    p_shapes, s_shapes = ps_shapes
+    p_shard = param_shardings(p_shapes, mesh, scan_layers=False)
+    s_shard = param_shardings(s_shapes, mesh, scan_layers=False)
+    B, R = cell.global_batch, cell.img_res
+    dp = _dp_axes(mesh, B)
+    images = _sds((B, R, R, 3), jnp.float32)
+    img_shard = _ns(mesh, dp, None, None, None)
+
+    if cell.kind == "cls":
+        o_shapes = jax.eval_shape(opt.init, p_shapes)
+        o_shard = param_shardings(o_shapes, mesh, scan_layers=False)
+        batch = {"images": images, "labels": _sds((B,), jnp.int32)}
+        b_shard = {"images": img_shard, "labels": _ns(mesh, dp)}
+
+        def train_step(params, state, opt_state, batch):
+            def loss(p):
+                l, (m, new_state) = efficientnet.loss_fn(
+                    p, state, batch["images"], batch["labels"], cfg,
+                    mesh=mesh)
+                return l, new_state
+            (l, new_state), grads = jax.value_and_grad(
+                loss, has_aux=True)(params)
+            params, opt_state, _ = opt.update(params, grads, opt_state,
+                                              OPT_CFG)
+            return params, new_state, opt_state, l
+
+        return StepSpec(
+            name=f"{cfg.name}:{cell.name}", fn=train_step,
+            args=(p_shapes, s_shapes, o_shapes, batch),
+            in_shardings=(p_shard, s_shard, o_shard, b_shard),
+            out_shardings=(p_shard, s_shard, o_shard, _ns(mesh)),
+            donate_argnums=(0, 2))
+
+    if cell.kind == "serve":
+        def serve_step(params, state, images):
+            logits, _ = efficientnet.forward(params, state, images, cfg,
+                                             train=False, mesh=mesh)
+            return logits
+
+        return StepSpec(
+            name=f"{cfg.name}:{cell.name}", fn=serve_step,
+            args=(p_shapes, s_shapes, images),
+            in_shardings=(p_shard, s_shard, img_shard),
+            out_shardings=_ns(mesh, dp, None))
+
+    raise ValueError(cell.kind)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+def build(arch_id: str, cell_name: str, mesh: Mesh,
+          variant: Optional[str] = None,
+          cfg_overrides: Optional[dict] = None) -> StepSpec:
+    import dataclasses as _dc
+    cfg = get_arch(arch_id)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    cell = get_shapes(arch_id)[cell_name]
+    if isinstance(cfg, LMConfig):
+        if cell.kind == "long" and variant == "window":
+            return build_lm_long_window(cfg, cell, mesh)
+        return build_lm(cfg, cell, mesh)
+    if isinstance(cfg, DiTConfig):
+        return build_dit(cfg, cell, mesh)
+    if isinstance(cfg, ViTConfig):
+        return build_vit(cfg, cell, mesh)
+    if isinstance(cfg, EffNetConfig):
+        return build_effnet(cfg, cell, mesh)
+    raise TypeError(type(cfg))

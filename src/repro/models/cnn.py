@@ -1,0 +1,122 @@
+"""Focus cheap ingest-CNN family (compressed classifiers, §4.1 of the paper).
+
+A small conv classifier parameterized by (n_blocks, width, input_res,
+n_classes) — the paper's two compression axes are "remove conv layers"
+(n_blocks) and "rescale input" (input_res); specialization shrinks
+n_classes to Ls+1 (§4.3). The penultimate ``feature_dim`` vector is the
+clustering feature (§2.2.3).
+
+These models are intentionally CPU-trainable so the full Focus pipeline
+(ingest -> index -> query) runs end-to-end in this container; the ViT family
+plays the role of GT-CNN at datacenter scale (see configs/focus_pipeline.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import CheapCNNConfig
+from repro.models import layers as L
+
+
+def _plan(cfg: CheapCNNConfig) -> List[Tuple[int, int, int]]:
+    """(c_in, c_out, stride) per conv block."""
+    plan = []
+    c_in = cfg.in_channels
+    c = cfg.width
+    res = cfg.input_res
+    for i in range(cfg.n_blocks):
+        stride = 2 if (i % 2 == 0 and res > 4) else 1
+        res = res // stride
+        c_out = min(cfg.width * (2 ** (i // 2)), 4 * cfg.width)
+        plan.append((c_in, c_out, stride))
+        c_in = c_out
+    return plan
+
+
+def init(rng, cfg: CheapCNNConfig):
+    dt = L.compute_dtype(cfg.dtype)
+    plan = _plan(cfg)
+    ks = jax.random.split(rng, len(plan) + 2)
+    blocks = []
+    for k, (ci, co, s) in zip(ks[: len(plan)], plan):
+        blocks.append({
+            "conv": L.conv_init(k, 3, 3, ci, co, dt),
+            "scale": jnp.ones((co,), jnp.float32),
+            "bias": jnp.zeros((co,), jnp.float32),
+        })
+    c_last = plan[-1][1]
+    return {
+        "blocks": blocks,
+        "feat": {"w": L.dense_init(ks[-2], c_last, cfg.feature_dim, dtype=dt),
+                 "b": jnp.zeros((cfg.feature_dim,), dt)},
+        "head": {"w": L.dense_init(ks[-1], cfg.feature_dim, cfg.n_classes,
+                                   dtype=dt),
+                 "b": jnp.zeros((cfg.n_classes,), dt)},
+    }
+
+
+def _block_norm(p, x):
+    """Cheap norm: per-channel RMS normalization + affine (stateless)."""
+    xf = x.astype(jnp.float32)
+    nu2 = jnp.mean(xf * xf, axis=(1, 2), keepdims=True)
+    xf = xf * jax.lax.rsqrt(nu2 + 1e-6)
+    return (xf * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def forward(params, images, cfg: CheapCNNConfig, mesh=None):
+    """images (B, R, R, C) -> (logits (B, n_classes) fp32, features fp32).
+
+    Returns logits AND the penultimate feature vector in one pass — exactly
+    what Focus ingest needs (top-K classes + clustering features).
+    """
+    dt = L.compute_dtype(cfg.dtype)
+    plan = _plan(cfg)
+    x = images.astype(dt)
+    for p, (ci, co, s) in zip(params["blocks"], plan):
+        x = L.conv({"w": p["conv"]["w"]}, x, stride=s)
+        x = jax.nn.relu(_block_norm(p, x))
+    x = jnp.mean(x, axis=(1, 2))                         # (B, C)
+    feats = jnp.tanh(x @ params["feat"]["w"] + params["feat"]["b"])
+    logits = (feats @ params["head"]["w"]
+              + params["head"]["b"]).astype(jnp.float32)
+    return logits, feats.astype(jnp.float32)
+
+
+def loss_fn(params, images, labels, cfg: CheapCNNConfig, mesh=None,
+            label_weights=None):
+    """Cross-entropy; optional per-class weights (OTHER-class reweighting,
+    paper footnote 2)."""
+    logits, _ = forward(params, images, cfg, mesh=mesh)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    if label_weights is not None:
+        nll = nll * jnp.take(label_weights, labels)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return jnp.mean(nll), {"nll": jnp.mean(nll), "acc": acc}
+
+
+def count_params(cfg: CheapCNNConfig) -> int:
+    total = 0
+    for ci, co, s in _plan(cfg):
+        total += 3 * 3 * ci * co + 2 * co
+    c_last = _plan(cfg)[-1][1]
+    total += c_last * cfg.feature_dim + cfg.feature_dim
+    total += cfg.feature_dim * cfg.n_classes + cfg.n_classes
+    return total
+
+
+def flops_per_image(cfg: CheapCNNConfig) -> int:
+    """Forward FLOPs per image — the paper's ingest-cost unit."""
+    total = 0
+    res = cfg.input_res
+    for ci, co, s in _plan(cfg):
+        res = res // s
+        total += 2 * res * res * 3 * 3 * ci * co
+    c_last = _plan(cfg)[-1][1]
+    total += 2 * c_last * cfg.feature_dim
+    total += 2 * cfg.feature_dim * cfg.n_classes
+    return total

@@ -1,0 +1,175 @@
+"""DiT: latent diffusion transformer (adaLN-Zero conditioning) [arXiv:2212.09748].
+
+Operates on VAE latents (img_res/8, 4 channels); the VAE is a stub — the
+data pipeline / input_specs provide latents directly (see DESIGN.md).
+Predicts (noise, sigma) per DiT's learn_sigma head; training uses the noise
+MSE. Generation runs a DDIM sampler loop (one forward per step).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.config import DiTConfig
+from repro.models import layers as L
+from repro.distributed import constrain
+
+
+def timestep_embedding(t, dim: int = 256, max_period: float = 10000.0):
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def init(rng, cfg: DiTConfig):
+    dt = L.compute_dtype(cfg.dtype)
+    ks = jax.random.split(rng, 8)
+    D = cfg.d_model
+    p2c = cfg.patch * cfg.patch * cfg.latent_channels
+
+    def layer_init(rng):
+        k1, k2, k3 = jax.random.split(rng, 3)
+        return {
+            "attn": L.attn_init(k1, D, cfg.n_heads, cfg.n_heads, dt),
+            "mlp": L.mlp_init(k2, D, cfg.d_ff, "gelu", dt),
+            "adaln": {"w": jnp.zeros((D, 6 * D), dt),   # adaLN-Zero: init 0
+                      "b": jnp.zeros((6 * D,), dt)},
+        }
+
+    stacked = jax.vmap(layer_init)(jax.random.split(ks[0], cfg.n_layers))
+    return {
+        "patch": L.patch_embed_init(ks[1], cfg.patch, cfg.latent_channels, D, dt),
+        "pos_embed": (jax.random.normal(ks[2], (1, cfg.n_tokens(), D),
+                                        jnp.float32) * 0.02).astype(dt),
+        "t_embed": {"w1": L.dense_init(ks[3], 256, D, dtype=dt),
+                    "b1": jnp.zeros((D,), dt),
+                    "w2": L.dense_init(ks[4], D, D, dtype=dt),
+                    "b2": jnp.zeros((D,), dt)},
+        "label_embed": (jax.random.normal(ks[5], (cfg.n_classes + 1, D),
+                                          jnp.float32) * 0.02).astype(dt),
+        "layers": stacked,
+        "final": {"adaln": {"w": jnp.zeros((D, 2 * D), dt),
+                            "b": jnp.zeros((2 * D,), dt)},
+                  "w": jnp.zeros((D, 2 * p2c), dt),     # noise + sigma
+                  "b": jnp.zeros((2 * p2c,), dt)},
+    }
+
+
+def _modulate(x, shift, scale):
+    return x * (1 + scale[:, None, :]) + shift[:, None, :]
+
+
+def forward(params, latents, t, labels, cfg: DiTConfig, mesh=None):
+    """latents: (B, h, w, C); t: (B,) int32; labels: (B,) int32.
+
+    Returns (noise_pred, sigma_pred), each (B, h, w, C).
+    """
+    dt = L.compute_dtype(cfg.dtype)
+    B, h, w, C = latents.shape
+    x = L.patch_embed(params["patch"], latents.astype(dt), cfg.patch)
+    N = x.shape[1]
+    pos = params["pos_embed"]
+    if pos.shape[1] != N:    # higher-res cells: interpolate the pos table
+        g_old = int(math.sqrt(pos.shape[1]))
+        g_new = int(math.sqrt(N))
+        pos = jax.image.resize(
+            pos.reshape(1, g_old, g_old, -1).astype(jnp.float32),
+            (1, g_new, g_new, pos.shape[-1]), "bilinear"
+        ).reshape(1, N, -1).astype(pos.dtype)
+    x = constrain(x + pos, mesh, "hidden")
+
+    temb = timestep_embedding(t)
+    te = params["t_embed"]
+    c = jax.nn.silu(temb.astype(dt) @ te["w1"] + te["b1"]) @ te["w2"] + te["b2"]
+    c = c + jnp.take(params["label_embed"], labels, axis=0).astype(dt)
+    c_act = jax.nn.silu(c)
+
+    def body(x, p):
+        mod = c_act @ p["adaln"]["w"] + p["adaln"]["b"]
+        (s1, sc1, g1, s2, sc2, g2) = jnp.split(mod, 6, axis=-1)
+        h_ = _modulate(L.layernorm({}, x), s1, sc1)
+        h_ = L.multihead_attention(p["attn"], h_, n_heads=cfg.n_heads,
+                                   n_kv_heads=cfg.n_heads, causal=False,
+                                   use_rope=False, mesh=mesh)
+        x = x + g1[:, None, :] * h_
+        h_ = _modulate(L.layernorm({}, x), s2, sc2)
+        h_ = L.mlp(p["mlp"], h_, "gelu", mesh=mesh)
+        x = constrain(x + g2[:, None, :] * h_, mesh, "hidden")
+        return x, ()
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=L.remat_policy(cfg.remat_policy))
+    if cfg.scan_layers:
+        x, _ = lax.scan(body, x, params["layers"])
+    else:
+        for i in range(cfg.n_layers):
+            p = jax.tree.map(lambda a: a[i], params["layers"])
+            x, _ = body(x, p)
+
+    fin = params["final"]
+    mod = c_act @ fin["adaln"]["w"] + fin["adaln"]["b"]
+    shift, scale = jnp.split(mod, 2, axis=-1)
+    x = _modulate(L.layernorm({}, x), shift, scale)
+    x = x @ fin["w"] + fin["b"]                      # (B, N, 2*p*p*C)
+
+    # unpatchify
+    g = int(math.sqrt(N))
+    p_ = cfg.patch
+    x = x.reshape(B, g, g, p_, p_, 2 * C)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(B, g * p_, g * p_, 2 * C)
+    noise, sigma = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return noise, sigma
+
+
+# ---------------------------------------------------------------------------
+# Diffusion process (linear schedule, DDIM sampling)
+# ---------------------------------------------------------------------------
+
+N_TRAIN_STEPS = 1000
+
+
+def alpha_bars(n_steps: int = N_TRAIN_STEPS):
+    betas = jnp.linspace(1e-4, 0.02, n_steps, dtype=jnp.float32)
+    return jnp.cumprod(1.0 - betas)
+
+
+def loss_fn(params, latents, labels, rng, cfg: DiTConfig, mesh=None):
+    """Noise-prediction MSE at uniformly sampled timesteps."""
+    B = latents.shape[0]
+    k1, k2 = jax.random.split(rng)
+    t = jax.random.randint(k1, (B,), 0, N_TRAIN_STEPS)
+    eps = jax.random.normal(k2, latents.shape, jnp.float32)
+    ab = jnp.take(alpha_bars(), t)[:, None, None, None]
+    noisy = jnp.sqrt(ab) * latents + jnp.sqrt(1 - ab) * eps
+    pred, _ = forward(params, noisy, t, labels, cfg, mesh=mesh)
+    loss = jnp.mean(jnp.square(pred - eps))
+    return loss, {"mse": loss}
+
+
+def sample(params, rng, labels, cfg: DiTConfig, img_res: int, n_steps: int,
+           mesh=None):
+    """DDIM sampler: ``n_steps`` forwards via lax.scan (gen_* cells)."""
+    B = labels.shape[0]
+    res = img_res // cfg.vae_factor
+    x = jax.random.normal(rng, (B, res, res, cfg.latent_channels), jnp.float32)
+    ab = alpha_bars()
+    ts = jnp.linspace(N_TRAIN_STEPS - 1, 0, n_steps).astype(jnp.int32)
+
+    def step(x, i):
+        t_cur = ts[i]
+        t_prev = jnp.where(i + 1 < n_steps, ts[jnp.minimum(i + 1, n_steps - 1)], -1)
+        eps, _ = forward(params, x, jnp.full((B,), t_cur), labels, cfg,
+                         mesh=mesh)
+        a_cur = ab[t_cur]
+        a_prev = jnp.where(t_prev >= 0, ab[jnp.maximum(t_prev, 0)], 1.0)
+        x0 = (x - jnp.sqrt(1 - a_cur) * eps) / jnp.sqrt(a_cur)
+        x = jnp.sqrt(a_prev) * x0 + jnp.sqrt(1 - a_prev) * eps
+        return x, ()
+
+    x, _ = lax.scan(step, x, jnp.arange(n_steps))
+    return x

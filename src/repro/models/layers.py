@@ -1,0 +1,480 @@
+"""Shared neural-net layers: norms, rotary GQA attention (train / prefill /
+decode-with-cache), dense MLP, GShard-style MoE, patch embedding, conv/SE/BN
+primitives. Pure functional: ``*_init`` builds param pytrees, the matching
+apply function consumes them.
+
+All matmuls are written so XLA SPMD can shard them with the rules in
+``repro.distributed.sharding`` (TP over heads / hidden / experts, FSDP over
+the d_model dim). Activation sharding constraints are applied by callers.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def remat_policy(name: str):
+    """Named activation-checkpoint policies (cfg.remat_policy)."""
+    import jax
+    if name == "nothing":
+        return None                      # save only layer inputs; recompute all
+    if name == "dots_nobatch":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    if name == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    raise ValueError(name)
+
+
+def compute_dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(rng, d_in: int, d_out: int, scale: Optional[float] = None,
+               dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(rng, (d_in, d_out), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * params["scale"]).astype(dt)
+
+
+def layernorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * lax.rsqrt(var + eps)
+    if params:
+        x = x * params["scale"] + params["bias"]
+    return x.astype(dt)
+
+
+def norm_init(kind: str, d: int):
+    if kind == "rmsnorm":
+        return rmsnorm_init(d)
+    if kind == "layernorm":
+        return layernorm_init(d)
+    if kind == "nonparametric_ln":     # OLMo: LN without affine params
+        return {}
+    raise ValueError(kind)
+
+
+def apply_norm(kind: str, params, x):
+    if kind == "rmsnorm":
+        return rmsnorm(params, x)
+    return layernorm(params, x)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    angles = angles[..., None, :]                       # (..., S, 1, dh/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, full / sliding-window / decode with KV cache)
+# ---------------------------------------------------------------------------
+
+def attn_init(rng, d_model: int, n_heads: int, n_kv_heads: int, dtype):
+    hd = d_model // n_heads
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(ks[0], d_model, n_heads * hd, dtype=dtype),
+        "wk": dense_init(ks[1], d_model, n_kv_heads * hd, dtype=dtype),
+        "wv": dense_init(ks[2], d_model, n_kv_heads * hd, dtype=dtype),
+        "wo": dense_init(ks[3], n_heads * hd, d_model, dtype=dtype),
+    }
+
+
+def _gqa_scores(q, k):
+    """q: (B,Sq,KV,G,dh)  k: (B,Sk,KV,dh) -> (B,KV,G,Sq,Sk) fp32."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_out(w, v):
+    """w: (B,KV,G,Sq,Sk)  v: (B,Sk,KV,dh) -> (B,Sq,KV,G,dh)."""
+    return jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(w.dtype))
+
+
+def multihead_attention(params, x, *, n_heads: int, n_kv_heads: int,
+                        causal: bool, window: int = 0,
+                        positions=None, theta: float = 10000.0,
+                        use_rope: bool = True, mesh=None,
+                        attn_impl: str = "einsum", out_kind: str = "hidden",
+                        q_chunk: int = 4096, scores_dtype=jnp.float32):
+    """Self attention over x: (B, S, D). Returns (B, S, D)."""
+    from repro.distributed import constrain
+
+    B, S, D = x.shape
+    hd = D // n_heads
+    g = n_heads // n_kv_heads
+    q = (x @ params["wq"]).reshape(B, S, n_kv_heads, g, hd)
+    k = (x @ params["wk"]).reshape(B, S, n_kv_heads, hd)
+    v = (x @ params["wv"]).reshape(B, S, n_kv_heads, hd)
+    if use_rope:
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        q = apply_rope(q.reshape(B, S, n_kv_heads * g, hd), positions,
+                       theta).reshape(B, S, n_kv_heads, g, hd)
+        k = apply_rope(k, positions, theta)
+
+    if attn_impl == "flash" and causal and window == 0:
+        from repro.kernels import ops as kops
+        qf = q.reshape(B, S, n_kv_heads * g, hd)
+        kf = jnp.repeat(k, g, axis=2)
+        vf = jnp.repeat(v, g, axis=2)
+        out = kops.flash_attention(qf, kf, vf, causal=True)
+        out = out.reshape(B, S, n_heads * hd)
+        return out @ params["wo"]
+
+    # Flat-head formulation: repeat KV heads to H so the head axis (H, which
+    # every assigned arch makes divisible by the model axis) shards fully —
+    # grouped (KV, G) scores would strand TP shards whenever KV < model
+    # (dbrx KV=8, granite KV=1) and trigger involuntary resharding.
+    qf = constrain(q.reshape(B, S, n_kv_heads * g, hd), mesh, "heads")
+    kf = constrain(jnp.repeat(k, g, axis=2) if g > 1 else k, mesh, "heads")
+    vf = constrain(jnp.repeat(v, g, axis=2) if g > 1 else v, mesh, "heads")
+
+    neg = -1e30 if scores_dtype == jnp.float32 else -3e38
+
+    def attend(q_blk, q0, Sq, k_end=None):
+        """softmax(q_blk . k^T[:k_end]) . v[:k_end] for a query block at q0.
+
+        When causal, callers pass k_end = q0 + Sq: keys beyond the block's
+        last row are never attended, so they are SLICED off rather than
+        masked — halves the causal FLOPs and shrinks the mask to the
+        (Sq, Sq) diagonal block (a full (Sq, S) mask is loop-invariant and
+        gets hoisted+materialized by XLA, ~1 GB per block at 32k).
+        """
+        kk = kf if k_end is None else kf[:, :k_end]
+        vv = vf if k_end is None else vf[:, :k_end]
+        Sk = kk.shape[1]
+        s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, kk,
+                       preferred_element_type=scores_dtype) / math.sqrt(hd)
+        s = constrain(s, mesh, "scores")
+        if causal or window:
+            qpos = q0 + jnp.arange(Sq)[:, None]
+            if causal and Sk == q0 + Sq and not window:
+                diag = jnp.tril(jnp.ones((Sq, Sq), bool))    # (Sq, Sq) only
+                s = jnp.concatenate(
+                    [s[..., :q0],
+                     jnp.where(diag, s[..., q0:], neg)], axis=-1)
+            else:
+                kpos = jnp.arange(Sk)[None, :]
+                mask = jnp.ones((Sq, Sk), bool)
+                if causal:
+                    mask &= kpos <= qpos
+                if window:
+                    mask &= kpos > qpos - window
+                s = jnp.where(mask, s, neg)
+        w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        w = constrain(w, mesh, "scores")
+        return jnp.einsum("bhqk,bkhd->bqhd", w, vv)
+
+    if q_chunk and S > q_chunk and S % q_chunk == 0:
+        # Long-sequence prefill: unrolled query blocks keep the live score
+        # tensor at (B, H, q_chunk, <=S) instead of (B, H, S, S). Unrolled
+        # (not lax.map) so HLO cost analysis counts every block.
+        outs = []
+        prev = None
+        for q0 in range(0, S, q_chunk):
+            q_blk = qf[:, q0:q0 + q_chunk]
+            if prev is not None:
+                # chain block i+1 on block i so the scheduler cannot keep
+                # every block's (B,H,Sq,Sk) score buffer alive at once
+                q_blk, _ = jax.lax.optimization_barrier((q_blk, prev))
+            k_end = q0 + q_chunk if (causal and not window) else None
+            prev = attend(q_blk, q0, q_chunk, k_end=k_end)
+            outs.append(prev)
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        out = attend(qf, 0, S)
+    out = out.reshape(B, S, n_heads * hd)
+    out = constrain(out, mesh, "ffn")       # heads TP-sharded before wo
+    return constrain(out @ params["wo"], mesh, out_kind)
+
+
+def decode_attention(params, x, cache_k, cache_v, cache_len, *,
+                     n_heads: int, n_kv_heads: int, theta: float = 10000.0,
+                     use_rope: bool = True, window: int = 0, mesh=None):
+    """One-token decode. x: (B, 1, D); cache_{k,v}: (B, S_max, KV, dh).
+
+    Returns (out, new_cache_k, new_cache_v). Attention over the cache is
+    linear in cache length (no quadratic term).
+    """
+    B, _, D = x.shape
+    hd = D // n_heads
+    g = n_heads // n_kv_heads
+    S_max = cache_k.shape[1]
+    q = (x @ params["wq"]).reshape(B, 1, n_kv_heads, g, hd)
+    k = (x @ params["wk"]).reshape(B, 1, n_kv_heads, hd)
+    v = (x @ params["wv"]).reshape(B, 1, n_kv_heads, hd)
+    pos = jnp.full((B, 1), cache_len, dtype=jnp.int32)
+    if use_rope:
+        q = apply_rope(q.reshape(B, 1, n_kv_heads * g, hd), pos,
+                       theta).reshape(B, 1, n_kv_heads, g, hd)
+        k = apply_rope(k, pos, theta)
+    cache_k = lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype),
+                                              cache_len, axis=1)
+    cache_v = lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype),
+                                              cache_len, axis=1)
+    scores = _gqa_scores(q, cache_k) / math.sqrt(hd)    # (B,KV,G,1,S_max)
+    kpos = jnp.arange(S_max)
+    valid = kpos <= cache_len
+    if window:
+        valid &= kpos > cache_len - window
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(w, cache_v).reshape(B, 1, n_heads * hd)
+    return out @ params["wo"], cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng, d_model: int, d_ff: int, act: str, dtype):
+    ks = jax.random.split(rng, 3)
+    p = {"wi": dense_init(ks[0], d_model, d_ff, dtype=dtype),
+         "wo": dense_init(ks[1], d_ff, d_model, dtype=dtype)}
+    if act == "swiglu":
+        p["wg"] = dense_init(ks[2], d_model, d_ff, dtype=dtype)
+    return p
+
+
+def mlp(params, x, act: str, mesh=None, out_kind: str = "hidden"):
+    from repro.distributed import constrain
+    three_d = x.ndim == 3
+    h = x @ params["wi"]
+    if three_d:
+        h = constrain(h, mesh, "ffn")       # keep the wide dim TP-sharded
+    if act == "swiglu":
+        g = x @ params["wg"]
+        if three_d:
+            g = constrain(g, mesh, "ffn")
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    out = h @ params["wo"]
+    return constrain(out, mesh, out_kind) if three_d else out
+
+
+# ---------------------------------------------------------------------------
+# MoE (GShard-style grouped dispatch; EP over the "model" axis)
+# ---------------------------------------------------------------------------
+
+def moe_init(rng, d_model: int, d_ff: int, n_experts: int, dtype):
+    ks = jax.random.split(rng, 4)
+    s = 1.0 / math.sqrt(d_model)
+
+    def ew(rng, a, b, sc):
+        return (jax.random.normal(rng, (n_experts, a, b), jnp.float32)
+                * sc).astype(dtype)
+
+    return {
+        "gate": dense_init(ks[0], d_model, n_experts, dtype=jnp.float32),
+        "wi": ew(ks[1], d_model, d_ff, s),
+        "wg": ew(ks[2], d_model, d_ff, s),
+        "wo": ew(ks[3], d_ff, d_model, 1.0 / math.sqrt(d_ff)),
+    }
+
+
+def moe(params, x, *, n_experts: int, top_k: int, group_size: int,
+        capacity_factor: float, mesh=None, out_kind: str = "hidden",
+        dispatch: str = "einsum"):
+    """Mixture-of-experts FFN. x: (B, S, D) -> (y, aux_loss).
+
+    Tokens are partitioned into groups of ``group_size``; each group
+    dispatches into per-expert capacity buffers via one-hot einsums (GShard).
+    Capacity C = ceil(group_size * top_k * cf / E). Expert matmuls carry the
+    expert dim so EP shards them over the "model" axis.
+    """
+    B, S, D = x.shape
+    T = B * S
+    gs = min(group_size, T)
+    while T % gs:
+        gs //= 2
+    G = T // gs
+    C = max(1, int(math.ceil(gs * top_k * capacity_factor / n_experts)))
+    C = min(C, gs)
+    xg = x.reshape(G, gs, D)
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        params["gate"])                       # (G,gs,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = lax.top_k(probs, top_k)             # (G,gs,k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    # Load-balancing auxiliary loss (Switch/GShard).
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], n_experts), axis=(0, 1))
+    aux = n_experts * jnp.sum(me * ce)
+
+    # Position of each token within its expert's capacity buffer.
+    onehot = jax.nn.one_hot(gate_idx, n_experts, dtype=jnp.int32)  # (G,gs,k,E)
+    # priority: choice 0 of all tokens first, then choice 1, ...
+    oh = onehot.transpose(0, 2, 1, 3).reshape(G, top_k * gs, n_experts)
+    pos = jnp.cumsum(oh, axis=1) - oh                          # (G,k*gs,E)
+    pos = pos.reshape(G, top_k, gs, n_experts).transpose(0, 2, 1, 3)
+    within = (onehot * pos).sum(-1)                            # (G,gs,k)
+    keep = within < C
+    gate_vals = gate_vals * keep
+
+    if dispatch == "einsum":
+        # GShard-style one-hot dispatch/combine einsums (baseline). Cost:
+        # materializes (G,gs,k,E,C) intermediates and spends
+        # 2·T·E·C·D dispatch FLOPs — see §Perf for the scatter variant.
+        disp = (jax.nn.one_hot(gate_idx, n_experts, dtype=x.dtype)[..., None]
+                * jax.nn.one_hot(jnp.where(keep, within, C), C + 1,
+                                 dtype=x.dtype)[..., None, :-1]
+                ).sum(2)                                       # (G,gs,E,C)
+        comb = (gate_vals[..., None, None].astype(x.dtype)
+                * jax.nn.one_hot(gate_idx, n_experts, dtype=x.dtype)[..., None]
+                * jax.nn.one_hot(jnp.where(keep, within, C), C + 1,
+                                 dtype=x.dtype)[..., None, :-1]).sum(2)
+        exp_in = jnp.einsum("gsec,gsd->egcd", disp, xg)        # (E,G,C,D)
+    else:
+        # Scatter/gather dispatch: no (G,gs,E,C) one-hots, no dispatch
+        # matmul FLOPs — tokens are scatter-added into the per-expert
+        # capacity buffer and gathered back with their gate weights.
+        g_ix = jnp.arange(G)[:, None, None]                    # (G,1,1)
+        c_ix = jnp.where(keep, within, C)                      # (G,gs,k)
+        exp_in = jnp.zeros((n_experts, G, C + 1, D), x.dtype)
+        exp_in = exp_in.at[gate_idx, g_ix, c_ix].add(
+            xg[:, :, None, :], mode="drop")                    # (E,G,C+1,D)
+        exp_in = exp_in[:, :, :C]
+
+    h = jnp.einsum("egcd,edf->egcf", exp_in, params["wi"])
+    hg = jnp.einsum("egcd,edf->egcf", exp_in, params["wg"])
+    h = jax.nn.silu(hg) * h
+    exp_out = jnp.einsum("egcf,efd->egcd", h, params["wo"])    # (E,G,C,D)
+
+    if dispatch == "einsum":
+        y = jnp.einsum("egcd,gsec->gsd", exp_out, comb)
+    else:
+        picked = exp_out[gate_idx, g_ix, jnp.minimum(within, C - 1)]
+        picked = picked * (gate_vals[..., None]).astype(x.dtype)  # (G,gs,k,D)
+        y = jnp.sum(picked, axis=2)                            # (G,gs,D)
+    y = y.reshape(B, S, D)
+    if mesh is not None:
+        from repro.distributed import constrain
+        y = constrain(y, mesh, out_kind)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Vision primitives
+# ---------------------------------------------------------------------------
+
+def patch_embed_init(rng, patch: int, in_ch: int, d_model: int, dtype):
+    k1, _ = jax.random.split(rng)
+    fan_in = patch * patch * in_ch
+    w = (jax.random.normal(k1, (patch, patch, in_ch, d_model), jnp.float32)
+         / math.sqrt(fan_in)).astype(dtype)
+    return {"w": w, "b": jnp.zeros((d_model,), dtype)}
+
+
+def patch_embed(params, images, patch: int):
+    """images: (B, H, W, C) -> (B, H/p * W/p, D)."""
+    out = lax.conv_general_dilated(
+        images, params["w"], window_strides=(patch, patch), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    out = out + params["b"]
+    B, Hp, Wp, D = out.shape
+    return out.reshape(B, Hp * Wp, D)
+
+
+def conv_init(rng, kh: int, kw: int, cin: int, cout: int, dtype,
+              groups: int = 1):
+    fan_in = kh * kw * cin // groups
+    w = (jax.random.normal(rng, (kh, kw, cin // groups, cout), jnp.float32)
+         / math.sqrt(max(fan_in, 1))).astype(dtype)
+    return {"w": w}
+
+
+def conv(params, x, stride: int = 1, groups: int = 1, padding="SAME"):
+    return lax.conv_general_dilated(
+        x, params["w"], window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def bn_init(c: int):
+    return ({"scale": jnp.ones((c,), jnp.float32),
+             "bias": jnp.zeros((c,), jnp.float32)},
+            {"mean": jnp.zeros((c,), jnp.float32),
+             "var": jnp.ones((c,), jnp.float32)})
+
+
+def batchnorm(params, state, x, train: bool, momentum: float = 0.99,
+              eps: float = 1e-3):
+    """Returns (y, new_state). x: (B, H, W, C)."""
+    if train:
+        xf = x.astype(jnp.float32)
+        mean = jnp.mean(xf, axis=(0, 1, 2))
+        var = jnp.var(xf, axis=(0, 1, 2))
+        new_state = {
+            "mean": momentum * state["mean"] + (1 - momentum) * mean,
+            "var": momentum * state["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var = state["mean"], state["var"]
+        new_state = state
+    y = (x.astype(jnp.float32) - mean) * lax.rsqrt(var + eps)
+    y = y * params["scale"] + params["bias"]
+    return y.astype(x.dtype), new_state
+
+
+def se_init(rng, c: int, c_se: int, dtype):
+    k1, k2 = jax.random.split(rng)
+    return {"w1": dense_init(k1, c, c_se, dtype=dtype),
+            "b1": jnp.zeros((c_se,), dtype),
+            "w2": dense_init(k2, c_se, c, dtype=dtype),
+            "b2": jnp.zeros((c,), dtype)}
+
+
+def squeeze_excite(params, x):
+    s = jnp.mean(x, axis=(1, 2))                  # (B, C)
+    s = jax.nn.silu(s @ params["w1"] + params["b1"])
+    s = jax.nn.sigmoid(s @ params["w2"] + params["b2"])
+    return x * s[:, None, None, :]

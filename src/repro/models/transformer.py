@@ -1,0 +1,242 @@
+"""Decoder-only LM (dense + MoE, GQA, rotary) with scan-over-layers,
+activation checkpointing, a prefill path and a KV-cache decode path.
+
+Params layout (leaves under "layers" are stacked on a leading L axis):
+  tok_embed (V, D)
+  layers/ln1/..., layers/attn/{wq,wk,wv,wo}, layers/ln2/...,
+  layers/mlp/{wi,wg,wo} or layers/moe/{gate,wi,wg,wo}
+  final_ln/..., head/w (D, V)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.config import LMConfig
+from repro.models import layers as L
+from repro.distributed import constrain
+
+
+def init(rng, cfg: LMConfig):
+    dt = L.compute_dtype(cfg.dtype)
+    ks = jax.random.split(rng, 4)
+    emb = (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model), jnp.float32)
+           * 0.02).astype(dt)
+
+    def layer_init(rng):
+        k1, k2 = jax.random.split(rng)
+        p = {
+            "ln1": L.norm_init(cfg.norm, cfg.d_model),
+            "attn": L.attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, dt),
+            "ln2": L.norm_init(cfg.norm, cfg.d_model),
+        }
+        if cfg.moe:
+            p["moe"] = L.moe_init(k2, cfg.d_model, cfg.d_ff, cfg.n_experts, dt)
+        else:
+            p["mlp"] = L.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_act, dt)
+        return p
+
+    layer_keys = jax.random.split(ks[1], cfg.n_layers)
+    stacked = jax.vmap(layer_init)(layer_keys)
+    params = {
+        "tok_embed": emb,
+        "layers": stacked,
+        "final_ln": L.norm_init(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": L.dense_init(ks[2], cfg.d_model, cfg.vocab_size,
+                                            dtype=dt)}
+    return params
+
+
+def _residual_kind(cfg: LMConfig, mesh, seq_len: int) -> str:
+    """Residual-stream layout: sequence-parallel ("hidden_sp") shards the
+    carry (and the remat-saved per-layer stack) over the model axis too —
+    16x less activation memory per chip; XLA inserts the all-gather before
+    attention and the reduce-scatter after (standard SP)."""
+    if cfg.act_sharding == "dp" or mesh is None:
+        return "hidden"
+    if cfg.act_sharding == "sp":
+        return "hidden_sp"
+    m = mesh.shape.get("model", 1)
+    dp_total = 1
+    for name in ("pod", "data"):
+        dp_total *= mesh.shape.get(name, 1)
+    if dp_total >= 32:
+        # enough DP shards: per-chip activations are already small, and SP's
+        # sp->heads resharding costs more than it saves (multi-pod meshes)
+        return "hidden"
+    return "hidden_sp" if seq_len % m == 0 and seq_len >= m else "hidden"
+
+
+def _layer(cfg: LMConfig, mesh, p, x, positions, res_kind: str):
+    h = L.apply_norm(cfg.norm, p["ln1"], x)
+    if res_kind == "hidden_sp":
+        # Megatron-SP: explicit all-gather point at the attention input —
+        # without it the partitioner faces an sp->heads reshard of k/v and
+        # falls back to full rematerialization (replicates the activations).
+        h = constrain(h, mesh, "hidden")
+    h = L.multihead_attention(
+        p["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        causal=True, window=cfg.window if cfg.attention == "window" else 0,
+        positions=positions, theta=cfg.rope_theta, mesh=mesh,
+        out_kind=res_kind, q_chunk=getattr(cfg, "attn_q_chunk", 4096),
+        scores_dtype=L.compute_dtype(
+            getattr(cfg, "attn_scores_dtype", "f32")
+            .replace("f32", "float32").replace("bf16", "bfloat16")))
+    x = constrain(x + h, mesh, res_kind)
+    h = L.apply_norm(cfg.norm, p["ln2"], x)
+    if res_kind == "hidden_sp":
+        h = constrain(h, mesh, "hidden")   # SP all-gather before wi
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe:
+        h, aux = L.moe(p["moe"], h, n_experts=cfg.n_experts,
+                       top_k=cfg.moe_top_k, group_size=cfg.moe_group_size,
+                       capacity_factor=cfg.moe_capacity_factor, mesh=mesh,
+                       out_kind=res_kind,
+                       dispatch=getattr(cfg, "moe_dispatch", "einsum"))
+    else:
+        h = L.mlp(p["mlp"], h, cfg.mlp_act, mesh=mesh, out_kind=res_kind)
+    x = constrain(x + h, mesh, res_kind)
+    return x, aux
+
+
+def forward(params, tokens, cfg: LMConfig, mesh=None,
+            last_logit_only: bool = False):
+    """tokens: (B, S) int32 -> (logits (B,S,V) fp32, aux_loss).
+
+    ``last_logit_only`` (prefill serving): the vocab projection — the
+    largest single matmul — runs on the final position only.
+    """
+    dt = L.compute_dtype(cfg.dtype)
+    B, S = tokens.shape
+    res_kind = _residual_kind(cfg, mesh, S)
+    x = jnp.take(params["tok_embed"], tokens, axis=0).astype(dt)
+    x = constrain(x, mesh, res_kind)
+    positions = jnp.arange(S)[None, :]
+
+    def body(x, p):
+        return _layer(cfg, mesh, p, x, positions, res_kind)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=L.remat_policy(cfg.remat_policy))
+
+    if cfg.scan_layers:
+        x, auxs = lax.scan(body, x, params["layers"])
+        aux = jnp.sum(auxs)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            p = jax.tree.map(lambda a: a[i], params["layers"])
+            x, a = body(x, p)
+            aux = aux + a
+
+    x = L.apply_norm(cfg.norm, params["final_ln"], x)
+    if last_logit_only:
+        x = x[:, -1:, :]
+    head_w = params["tok_embed"].T if cfg.tie_embeddings else params["head"]["w"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head_w,
+                        preferred_element_type=jnp.float32)
+    return constrain(logits, mesh, "logits"), aux
+
+
+def loss_fn(params, tokens, labels, cfg: LMConfig, mesh=None,
+            aux_weight: float = 0.01):
+    logits, aux = forward(params, tokens, cfg, mesh=mesh)
+    # One-hot contraction instead of take_along_axis: with the vocab dim
+    # sharded over "model", a gather would force an all-gather of the full
+    # (B, S, V) logits; the einsum contracts locally + a small all-reduce.
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, cfg.vocab_size, dtype=logits.dtype)
+    picked = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = lse - picked
+    loss = jnp.mean(nll) + aux_weight * aux
+    return loss, {"nll": jnp.mean(nll), "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    dt = dtype or L.compute_dtype(cfg.dtype)
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    shape = (cfg.n_layers, batch, max_len, kv, hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def decode_step(params, cache, token, cache_len, cfg: LMConfig, mesh=None):
+    """One decode step. token: (B, 1) int32; cache_len: scalar int32.
+
+    Returns (logits (B, 1, V), new_cache). Attention is linear in cache
+    length; the per-layer cache update is scanned so the HLO stays small.
+    """
+    dt = L.compute_dtype(cfg.dtype)
+    x = jnp.take(params["tok_embed"], token, axis=0).astype(dt)
+
+    def layer_fn(x, p, ck, cv):
+        h = L.apply_norm(cfg.norm, p["ln1"], x)
+        h, ck, cv = L.decode_attention(
+            p["attn"], h, ck, cv, cache_len, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, theta=cfg.rope_theta,
+            window=cfg.window if cfg.attention == "window" else 0, mesh=mesh)
+        x = x + h
+        h = L.apply_norm(cfg.norm, p["ln2"], x)
+        if cfg.moe:
+            h, _ = L.moe(p["moe"], h, n_experts=cfg.n_experts,
+                         top_k=cfg.moe_top_k, group_size=cfg.moe_group_size,
+                         capacity_factor=cfg.moe_capacity_factor, mesh=mesh,
+                         dispatch=getattr(cfg, "moe_dispatch", "einsum"))
+        else:
+            h = L.mlp(p["mlp"], h, cfg.mlp_act, mesh=mesh)
+        return x + h, ck, cv
+
+    if cfg.scan_layers:
+        # The stacked cache rides the scan CARRY with per-layer
+        # dynamic-update-slice: XLA keeps loop carries in place, so the
+        # multi-hundred-GB cache is updated without a second buffer
+        # (scanning it as xs/ys would double-buffer it).
+        def body(carry, inp):
+            x, ck_all, cv_all = carry
+            p, i = inp
+            ck = jax.tree.map(lambda a: a[0],
+                              lax.dynamic_slice_in_dim(ck_all, i, 1, 0))
+            cv = jax.tree.map(lambda a: a[0],
+                              lax.dynamic_slice_in_dim(cv_all, i, 1, 0))
+            x, ck, cv = layer_fn(x, p, ck, cv)
+            ck_all = lax.dynamic_update_slice_in_dim(
+                ck_all, ck[None].astype(ck_all.dtype), i, 0)
+            cv_all = lax.dynamic_update_slice_in_dim(
+                cv_all, cv[None].astype(cv_all.dtype), i, 0)
+            return (x, ck_all, cv_all), ()
+
+        (x, ks, vs), _ = lax.scan(
+            body, (x, cache["k"], cache["v"]),
+            (params["layers"], jnp.arange(cfg.n_layers)))
+        new_cache = {"k": ks, "v": vs}
+    else:
+        ks, vs = cache["k"], cache["v"]
+        for i in range(cfg.n_layers):
+            p = jax.tree.map(lambda a: a[i], params["layers"])
+            x, ck, cv = layer_fn(x, p, ks[i], vs[i])
+            ks = ks.at[i].set(ck)
+            vs = vs.at[i].set(cv)
+        new_cache = {"k": ks, "v": vs}
+
+    x = L.apply_norm(cfg.norm, params["final_ln"], x)
+    head_w = params["tok_embed"].T if cfg.tie_embeddings else params["head"]["w"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head_w,
+                        preferred_element_type=jnp.float32)
+    return logits, new_cache
+
+
+def prefill(params, tokens, cfg: LMConfig, mesh=None):
+    """Prefill forward (no cache write-back; returns last-position logits)."""
+    logits, _ = forward(params, tokens, cfg, mesh=mesh,
+                        last_logit_only=True)
+    return logits

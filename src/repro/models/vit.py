@@ -1,0 +1,128 @@
+"""ViT / DeiT image classifier (encoder-only transformer, learned pos-emb,
+CLS token, optional DeiT distillation token). Supports variable input
+resolution via pos-emb interpolation (cls_384 finetune cell).
+
+This family doubles as the Focus GT-CNN (vit-l16) and as the base for the
+compressed cheap-CNN search space (vit-s16 with layers removed / input
+rescaled), mirroring the paper's ResNet152 / ResNet18-variants split.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.config import ViTConfig
+from repro.models import layers as L
+from repro.distributed import constrain
+
+
+def init(rng, cfg: ViTConfig):
+    dt = L.compute_dtype(cfg.dtype)
+    ks = jax.random.split(rng, 6)
+    n_tok = cfg.n_tokens()
+
+    def layer_init(rng):
+        k1, k2 = jax.random.split(rng)
+        return {
+            "ln1": L.layernorm_init(cfg.d_model),
+            "attn": L.attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_heads, dt),
+            "ln2": L.layernorm_init(cfg.d_model),
+            "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, "gelu", dt),
+        }
+
+    stacked = jax.vmap(layer_init)(jax.random.split(ks[0], cfg.n_layers))
+    params = {
+        "patch": L.patch_embed_init(ks[1], cfg.patch, cfg.in_channels,
+                                    cfg.d_model, dt),
+        "cls": jnp.zeros((1, 1, cfg.d_model), dt),
+        "pos_embed": (jax.random.normal(ks[2], (1, n_tok, cfg.d_model),
+                                        jnp.float32) * 0.02).astype(dt),
+        "layers": stacked,
+        "final_ln": L.layernorm_init(cfg.d_model),
+        "head": {"w": L.dense_init(ks[3], cfg.d_model, cfg.n_classes, dtype=dt),
+                 "b": jnp.zeros((cfg.n_classes,), dt)},
+    }
+    if cfg.distill_token:
+        params["dist"] = jnp.zeros((1, 1, cfg.d_model), dt)
+        params["head_dist"] = {
+            "w": L.dense_init(ks[4], cfg.d_model, cfg.n_classes, dtype=dt),
+            "b": jnp.zeros((cfg.n_classes,), dt)}
+    return params
+
+
+def _interp_pos(pos, n_special: int, n_patches_new: int):
+    """Bilinear pos-embedding interpolation for a new resolution."""
+    n_patches_old = pos.shape[1] - n_special
+    if n_patches_old == n_patches_new:
+        return pos
+    g_old = int(math.sqrt(n_patches_old))
+    g_new = int(math.sqrt(n_patches_new))
+    special, grid = pos[:, :n_special], pos[:, n_special:]
+    grid = grid.reshape(1, g_old, g_old, -1)
+    grid = jax.image.resize(grid.astype(jnp.float32),
+                            (1, g_new, g_new, grid.shape[-1]), "bilinear")
+    grid = grid.reshape(1, g_new * g_new, -1).astype(pos.dtype)
+    return jnp.concatenate([special, grid], axis=1)
+
+
+def forward(params, images, cfg: ViTConfig, mesh=None, *,
+            features_only: bool = False):
+    """images: (B, H, W, C) -> logits (B, n_classes) fp32.
+
+    ``features_only`` returns the penultimate (pre-head) CLS representation —
+    the Focus feature vector used for clustering (§2.2.3 of the paper).
+    """
+    dt = L.compute_dtype(cfg.dtype)
+    images = images.astype(dt)
+    x = L.patch_embed(params["patch"], images, cfg.patch)      # (B, N, D)
+    B, N, D = x.shape
+    toks = [jnp.broadcast_to(params["cls"], (B, 1, D))]
+    n_special = 1
+    if cfg.distill_token:
+        toks.append(jnp.broadcast_to(params["dist"], (B, 1, D)))
+        n_special = 2
+    x = jnp.concatenate(toks + [x], axis=1)
+    x = x + _interp_pos(params["pos_embed"], n_special, N)
+    x = constrain(x, mesh, "hidden")
+
+    def body(x, p):
+        h = L.layernorm(p["ln1"], x)
+        h = L.multihead_attention(p["attn"], h, n_heads=cfg.n_heads,
+                                  n_kv_heads=cfg.n_heads, causal=False,
+                                  use_rope=False, mesh=mesh)
+        x = x + h
+        h = L.layernorm(p["ln2"], x)
+        x = constrain(x + L.mlp(p["mlp"], h, "gelu", mesh=mesh), mesh, "hidden")
+        return x, ()
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=L.remat_policy(cfg.remat_policy))
+    if cfg.scan_layers:
+        x, _ = lax.scan(body, x, params["layers"])
+    else:
+        for i in range(cfg.n_layers):
+            p = jax.tree.map(lambda a: a[i], params["layers"])
+            x, _ = body(x, p)
+
+    x = L.layernorm(params["final_ln"], x)
+    cls = x[:, 0]
+    if features_only:
+        return cls.astype(jnp.float32)
+    logits = (cls @ params["head"]["w"] + params["head"]["b"]).astype(jnp.float32)
+    if cfg.distill_token:
+        dist = x[:, 1]
+        logits_d = (dist @ params["head_dist"]["w"]
+                    + params["head_dist"]["b"]).astype(jnp.float32)
+        logits = (logits + logits_d) / 2
+    return logits
+
+
+def loss_fn(params, images, labels, cfg: ViTConfig, mesh=None):
+    logits = forward(params, images, cfg, mesh=mesh)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return jnp.mean(nll), {"nll": jnp.mean(nll), "acc": acc}

@@ -1,0 +1,3 @@
+from repro.train.optimizer import OptConfig  # noqa: F401
+from repro.train.train_loop import TrainConfig, make_train_step, train  # noqa: F401
+from repro.train.checkpoint import CheckpointManager  # noqa: F401

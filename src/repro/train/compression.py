@@ -1,0 +1,67 @@
+"""Gradient compression for the data-parallel reduce (1000+-node trick).
+
+Two schemes, both usable inside the train step:
+  * ``cast_bf16``   — all-reduce in bf16 (2x wire saving, ~free accuracy)
+  * ``int8_ef``     — per-tensor int8 quantization with error feedback:
+                      residuals are carried in a state pytree so the bias
+                      introduced by quantization cancels over steps.
+
+``compressed_psum`` is the shard_map building block that performs the actual
+quantized collective over a named axis; ``apply_ef`` is the mesh-agnostic
+numerics (used by the CPU tests and inside pjit, where XLA owns the
+collective and we compress what the collective sees).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_ef_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant_int8(g) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def apply_ef(grads, ef_state):
+    """Error-feedback int8 compression of a grad pytree.
+
+    Returns (dequantized grads as seen after the wire, new ef_state).
+    """
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, scale = _quant_int8(gf)
+        deq = q.astype(jnp.float32) * scale
+        return deq, gf - deq
+
+    flat = jax.tree.map(one, grads, ef_state)
+    deq = jax.tree.map(lambda t: t[0], flat,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return deq, new_e
+
+
+def cast_bf16(grads):
+    """bf16 wire-format round-trip (what a bf16 all-reduce sees)."""
+    return jax.tree.map(
+        lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads)
+
+
+def compressed_psum(x, axis_name: str):
+    """int8-quantized psum over a named axis (use inside shard_map).
+
+    Each participant quantizes locally; int32 accumulation avoids overflow;
+    scales are maxed across the axis so dequantization is consistent.
+    """
+    q, scale = _quant_int8(x.astype(jnp.float32))
+    scale = jax.lax.pmax(scale, axis_name)      # shared scale
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * scale

@@ -1,0 +1,99 @@
+"""Elastic scaling, preemption handling, straggler mitigation.
+
+At 1000+ nodes the failure model is: pods preempt (SIGTERM), hosts die
+(missing heartbeat), and individual chips straggle (thermal / HBM ECC).
+The JAX-level responses implemented here:
+
+  * PreemptionHandler — SIGTERM/SIGINT -> synchronous checkpoint + clean exit
+    (the train loop checks ``triggered`` each step).
+  * choose_mesh / reshard — rebuild the mesh from the devices that remain
+    and ``jax.device_put`` every array to its new NamedSharding; a (2,16,16)
+    pod-failure degrades to (16,16) without changing model code because all
+    sharding rules are axis-name based.
+  * StepTimer — EMA step-time tracker; steps slower than
+    ``straggler_factor``x the EMA are counted and surfaced. On a real pod
+    this feeds the controller that re-slices the job (here: observable
+    metric + hook, exercised by tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import signal
+import time
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed import param_shardings
+
+
+class PreemptionHandler:
+    """Registers SIGTERM/SIGINT; sets ``triggered`` instead of dying."""
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self.triggered = False
+        self._old = {}
+        for s in signals:
+            try:
+                self._old[s] = signal.signal(s, self._handle)
+            except ValueError:          # non-main thread (tests)
+                pass
+
+    def _handle(self, signum, frame):
+        self.triggered = True
+
+    def restore(self):
+        for s, h in self._old.items():
+            signal.signal(s, h)
+
+
+def choose_mesh(devices=None, model_parallelism: int = 1,
+                pods: int = 1) -> Mesh:
+    """Largest (pod, data, model) mesh the surviving devices support."""
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    mp = model_parallelism
+    while n % (mp * pods) and mp > 1:
+        mp //= 2
+    dp = n // (mp * pods)
+    import numpy as np
+    arr = np.array(devices[: pods * dp * mp]).reshape(pods, dp, mp)
+    return Mesh(arr, ("pod", "data", "model"))
+
+
+def reshard(tree, new_mesh: Mesh, scan_layers: bool = True):
+    """Move every array in ``tree`` onto ``new_mesh`` shardings (elastic
+    re-scale path: same rules, new axis sizes)."""
+    shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    shardings = param_shardings(shapes, new_mesh, scan_layers=scan_layers)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+
+
+class StepTimer:
+    """EMA step timing + straggler counting."""
+
+    def __init__(self, alpha: float = 0.1, straggler_factor: float = 2.0):
+        self.alpha = alpha
+        self.factor = straggler_factor
+        self.ema: Optional[float] = None
+        self.last: float = 0.0
+        self.n_steps = 0
+        self.n_stragglers = 0
+
+    @contextlib.contextmanager
+    def measure(self):
+        t0 = time.perf_counter()
+        yield
+        self.observe(time.perf_counter() - t0)
+
+    def observe(self, dt: float):
+        self.last = dt
+        self.n_steps += 1
+        if self.ema is None:
+            self.ema = dt
+            return
+        if dt > self.factor * self.ema:
+            self.n_stragglers += 1
+        self.ema = (1 - self.alpha) * self.ema + self.alpha * dt

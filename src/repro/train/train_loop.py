@@ -1,0 +1,135 @@
+"""Generic pjit train loop: grad accumulation, mixed precision, gradient
+compression, checkpoint/restart, preemption handling.
+
+``loss_fn(params, batch, rng) -> (loss, metrics)`` is the model contract;
+``batch`` is a dict of arrays with a leading global-batch dim.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train import compression as comp
+from repro.train import optimizer as opt
+from repro.train.checkpoint import CheckpointManager
+from repro.train.elastic import PreemptionHandler, StepTimer
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 300
+    log_every: int = 50
+    ckpt_every: int = 0                 # 0 = only on preemption/final
+    n_microbatches: int = 1             # grad accumulation
+    compression: str = "none"           # none | bf16 | int8_ef
+    seed: int = 0
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: opt.OptConfig,
+                    train_cfg: TrainConfig, mesh=None, donate: bool = True):
+    """Build the jitted (params, opt_state, ef, batch, rng) -> ... step."""
+
+    def grads_of(params, batch, rng):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch, rng)
+
+    def step_fn(params, opt_state, ef_state, batch, rng):
+        n_mb = train_cfg.n_microbatches
+        if n_mb > 1:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((n_mb, x.shape[0] // n_mb) + x.shape[1:]),
+                batch)
+            rngs = jax.random.split(rng, n_mb)
+
+            def acc(carry, inp):
+                g_acc, loss_acc = carry
+                mb, r = inp
+                (loss, metrics), g = grads_of(params, mb, r)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                     g_acc, g)
+                return (g_acc, loss_acc + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), metrics = jax.lax.scan(
+                acc, (g0, jnp.zeros((), jnp.float32)), (mbs, rngs))
+            grads = jax.tree.map(lambda g: g / n_mb, grads)
+            loss = loss / n_mb
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = grads_of(params, batch, rng)
+
+        if train_cfg.compression == "bf16":
+            grads = comp.cast_bf16(grads)
+        elif train_cfg.compression == "int8_ef":
+            grads, ef_state = comp.apply_ef(grads, ef_state)
+
+        params, opt_state, om = opt.update(params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss, **om)
+        return params, opt_state, ef_state, metrics
+
+    donate_args = (0, 1, 2) if donate else ()
+    return jax.jit(step_fn, donate_argnums=donate_args)
+
+
+def train(loss_fn: Callable, params, data_iter: Iterator[Dict[str, Any]],
+          opt_cfg: opt.OptConfig, train_cfg: TrainConfig,
+          ckpt: Optional[CheckpointManager] = None, mesh=None,
+          resume: bool = True, hooks=()):
+    """Run the loop; returns (params, history list of metric dicts).
+
+    Fault tolerance: restores the newest checkpoint if present (resume=True);
+    checkpoints on SIGTERM/SIGINT (preemption) and every ckpt_every steps;
+    the data-iterator position is part of the checkpoint extras.
+    """
+    step_fn = make_train_step(loss_fn, opt_cfg, train_cfg, mesh=mesh)
+    opt_state = opt.init(params)
+    ef_state = (comp.init_ef_state(params)
+                if train_cfg.compression == "int8_ef" else 0)
+    start_step = 0
+
+    if ckpt is not None and resume and ckpt.latest_step() is not None:
+        start_step, tree, extra = ckpt.restore()
+        params, opt_state, ef_state = tree
+        for _ in range(int(extra.get("batches_consumed", start_step))):
+            next(data_iter)                      # replay iterator position
+
+    rng = jax.random.PRNGKey(train_cfg.seed)
+    preempt = PreemptionHandler()
+    timer = StepTimer()
+    history = []
+
+    step = start_step
+    for step in range(start_step, train_cfg.steps):
+        batch = next(data_iter)
+        rng, sub = jax.random.split(rng)
+        with timer.measure():
+            params, opt_state, ef_state, metrics = step_fn(
+                params, opt_state, ef_state, batch, sub)
+        if (step + 1) % train_cfg.log_every == 0 or step == start_step:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step + 1
+            m["step_time_s"] = timer.last
+            history.append(m)
+            for h in hooks:
+                h(m)
+        if ckpt is not None and (
+                preempt.triggered
+                or (train_cfg.ckpt_every
+                    and (step + 1) % train_cfg.ckpt_every == 0)):
+            ckpt.save(step + 1, (params, opt_state, ef_state),
+                      extra={"batches_consumed": step + 1,
+                             "preempted": preempt.triggered})
+            if preempt.triggered:
+                ckpt.wait()
+                return params, history
+
+    if ckpt is not None:
+        ckpt.save(train_cfg.steps, (params, opt_state, ef_state),
+                  extra={"batches_consumed": step + 1})
+        ckpt.wait()
+    return params, history

@@ -1,0 +1,13 @@
+"""Test config. NOTE: no XLA_FLAGS here — tests must see 1 CPU device;
+only the dry-run creates 512 placeholder devices (in its own process)."""
+import os
+
+import numpy as np
+import pytest
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,95 @@
+"""Synthetic video substrate: stream statistics match paper §2.2; background
+subtraction finds the planted objects; pixel differencing matches dups."""
+import numpy as np
+import pytest
+
+from repro.data import (BackgroundSubtractor, StreamConfig, VideoStream,
+                        extract_crops, get_stream, pixel_difference)
+from repro.data.video import STREAM_ZOO, _class_proto
+
+
+def test_stream_zoo_has_13_streams():
+    assert len(STREAM_ZOO) == 13
+    assert len({s.name for s in STREAM_ZOO}) == 13
+
+
+def test_limited_class_set_per_stream():
+    """§2.2.2: each stream uses a small, stream-specific subset of classes."""
+    vs = get_stream("lausanne", duration_s=60)
+    _, _, _, labels = vs.objects_array()
+    assert 0 < len(np.unique(labels)) <= vs.cfg.n_stream_classes
+    # two streams overlap little (Jaccard ~0.46 in the paper)
+    vs2 = get_stream("jacksonh", duration_s=60)
+    a = set(vs.stream_classes.tolist())
+    b = set(vs2.stream_classes.tolist())
+    assert len(a & b) / len(a | b) < 0.6
+
+
+def test_class_frequency_skew():
+    """§2.2.2: a few classes dominate (power law)."""
+    vs = get_stream("auburn_c", duration_s=240)
+    _, _, _, labels = vs.objects_array()
+    _, counts = np.unique(labels, return_counts=True)
+    counts = np.sort(counts)[::-1]
+    top3 = counts[:3].sum() / counts.sum()
+    assert top3 > 0.5
+
+
+def test_objects_persist_across_frames():
+    """§2.2.3: the same track appears in many consecutive frames."""
+    vs = get_stream("cnn", duration_s=30)
+    _, frames, tracks, _ = vs.objects_array()
+    if len(tracks):
+        _, counts = np.unique(tracks, return_counts=True)
+        assert counts.mean() > 5
+
+
+def test_track_crops_nearly_identical():
+    vs = get_stream("bend", duration_s=60)
+    crops, frames, tracks, _ = vs.objects_array()
+    tids, counts = np.unique(tracks, return_counts=True)
+    tid = tids[np.argmax(counts)]
+    sel = crops[tracks == tid]
+    d = np.abs(sel[0] - sel[-1]).mean()
+    assert d < 0.15          # slow drift, §2.2.3
+
+
+def test_class_protos_distinct():
+    a, b = _class_proto(3, 32), _class_proto(4, 32)
+    assert np.abs(a - b).mean() > 0.05
+
+
+def test_bgsub_detects_planted_objects():
+    vs = get_stream("lausanne", duration_s=20, fps=5)
+    bg = BackgroundSubtractor(threshold=0.05)
+    n_boxes = 0
+    for frame in vs.frames(max_frames=60):
+        boxes = bg(frame)
+        n_boxes += len(boxes)
+        crops = extract_crops(frame, boxes, vs.cfg.obj_res)
+        assert crops.shape[1:] == (32, 32, 3)
+    assert n_boxes > 0
+
+
+def test_bgsub_static_scene_is_silent():
+    bg = BackgroundSubtractor()
+    frame = np.full((64, 64, 3), 0.4, np.float32)
+    assert bg(frame) == []
+    for _ in range(5):
+        assert bg(frame + 1e-4) == []
+
+
+def test_pixel_difference_matches_duplicates():
+    r = np.random.default_rng(0)
+    a = r.random((3, 8, 8, 3)).astype(np.float32)
+    b = np.stack([a[2] + 1e-3, r.random((8, 8, 3)).astype(np.float32)])
+    m = pixel_difference(a, b, threshold=0.02)
+    assert m[2] == 0                    # a[2] ~ b[0]
+    assert m[0] == -1 and m[1] == -1    # no match
+
+
+def test_object_stream_respects_frame_stride():
+    vs = get_stream("sittard", duration_s=30)
+    n1 = len(vs.objects_array(frame_stride=1)[0])
+    n5 = len(vs.objects_array(frame_stride=5)[0])
+    assert n5 < n1

@@ -1,0 +1,88 @@
+"""Top-K index invariants + persistence (paper §3, §4.1, §5)."""
+import numpy as np
+import pytest
+
+from repro.core.index import ClassMap, Cluster, TopKIndex
+
+
+def _mk_cluster(cid, probs, members, frames, d=8):
+    c = Cluster(cid, centroid=np.zeros(d, np.float32),
+                rep_crop=np.zeros((4, 4, 3), np.float32),
+                mean_probs=np.zeros_like(probs))
+    for m, f in zip(members, frames):
+        c.add(m, f, np.zeros(d, np.float32), probs)
+    return c
+
+
+def test_topk_ranks_descending():
+    probs = np.array([0.1, 0.5, 0.05, 0.3, 0.05], np.float32)
+    c = _mk_cluster(0, probs, [1], [1])
+    np.testing.assert_array_equal(c.topk(3), [1, 3, 0])
+
+
+def test_lookup_respects_Kx():
+    """§5: dynamic K_x <= K filters by ingest-time rank."""
+    idx = TopKIndex(K=3, n_local_classes=5)
+    probs = np.array([0.1, 0.5, 0.05, 0.3, 0.05], np.float32)
+    idx.add_cluster(_mk_cluster(0, probs, [0, 1], [0, 1]))
+    assert idx.lookup(1, Kx=1) == [0]
+    assert idx.lookup(3, Kx=1) == []          # rank 1 >= Kx
+    assert idx.lookup(3, Kx=2) == [0]
+    assert idx.lookup(0, Kx=3) == [0]
+    assert idx.lookup(2, Kx=3) == []          # rank 3 cut by K=3
+
+
+def test_frames_union_sorted_unique():
+    idx = TopKIndex(K=2, n_local_classes=3)
+    p = np.array([0.7, 0.2, 0.1], np.float32)
+    idx.add_cluster(_mk_cluster(0, p, [0, 1], [5, 3]))
+    idx.add_cluster(_mk_cluster(1, p, [2], [5]))
+    frames = idx.frames_of([0, 1])
+    np.testing.assert_array_equal(frames, [3, 5])
+
+
+def test_class_map_other_semantics():
+    cmap = ClassMap(global_ids=np.array([10, 42, 99]))
+    assert cmap.to_local(42) == 1
+    assert cmap.to_local(7) == cmap.other_local == 3
+    assert cmap.to_global(1) == 42
+    assert cmap.to_global(3) == -1            # OTHER sentinel
+    assert cmap.n_local == 4
+
+
+def test_specialized_lookup_routes_unknown_class_to_other():
+    cmap = ClassMap(global_ids=np.array([10, 42]))
+    idx = TopKIndex(K=1, n_local_classes=3, class_map=cmap)
+    # cluster strongly OTHER (local id 2)
+    p = np.array([0.0, 0.1, 0.9], np.float32)
+    idx.add_cluster(_mk_cluster(0, p, [0], [0]))
+    # any class outside {10, 42} hits the OTHER clusters
+    assert idx.lookup(777) == [0]
+    assert idx.lookup(10) == []
+
+
+def test_mean_probs_running_mean():
+    idx = TopKIndex(K=1, n_local_classes=2)
+    c = Cluster(0, np.zeros(4, np.float32), np.zeros((2, 2, 3)),
+                np.zeros(2, np.float32))
+    c.add(0, 0, np.zeros(4, np.float32), np.array([1.0, 0.0], np.float32))
+    c.add(1, 1, np.zeros(4, np.float32), np.array([0.0, 1.0], np.float32))
+    np.testing.assert_allclose(c.mean_probs, [0.5, 0.5])
+
+
+def test_save_load_roundtrip(tmp_path):
+    cmap = ClassMap(global_ids=np.array([3, 8]))
+    idx = TopKIndex(K=2, n_local_classes=3, class_map=cmap)
+    p = np.array([0.6, 0.3, 0.1], np.float32)
+    idx.add_cluster(_mk_cluster(0, p, [0, 1, 2], [0, 0, 1]))
+    idx.add_cluster(_mk_cluster(1, p[::-1].copy(), [3], [2]))
+    path = str(tmp_path / "index")
+    idx.save(path)
+    idx2 = TopKIndex.load(path)
+    assert idx2.K == 2 and idx2.n_clusters == 2
+    assert idx2.lookup(3) == idx.lookup(3)
+    assert idx2.lookup(999) == idx.lookup(999)
+    np.testing.assert_array_equal(idx2.frames_of([0, 1]),
+                                  idx.frames_of([0, 1]))
+    np.testing.assert_allclose(idx2.clusters[0].mean_probs,
+                               idx.clusters[0].mean_probs)

@@ -1,0 +1,142 @@
+"""Per-kernel correctness: sweep shapes/dtypes, assert_allclose vs ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# centroid_assign
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,M,D", [
+    (1, 1, 8), (7, 13, 32), (64, 64, 128), (130, 257, 64), (256, 50, 512),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_centroid_assign_matches_ref(B, M, D, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(B * M + D))
+    f = jax.random.normal(k1, (B, D), dtype)
+    c = jax.random.normal(k2, (M, D), dtype)
+    d2, j = ops.centroid_assign(f, c)
+    d2r, jr = ref.centroid_assign_ref(f, c)
+    np.testing.assert_array_equal(np.asarray(j), np.asarray(jr))
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d2r),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("bb,bm", [(8, 8), (32, 16), (128, 128)])
+def test_centroid_assign_block_shapes(bb, bm):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    f = jax.random.normal(k1, (100, 96))
+    c = jax.random.normal(k2, (77, 96))
+    d2, j = ops.centroid_assign(f, c, bb=bb, bm=bm)
+    d2r, jr = ref.centroid_assign_ref(f, c)
+    np.testing.assert_array_equal(np.asarray(j), np.asarray(jr))
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d2r), atol=1e-4)
+
+
+def test_centroid_assign_identical_rows():
+    """Distance to an exact-duplicate centroid must be ~0 at the dup index."""
+    f = jnp.tile(jnp.arange(32, dtype=jnp.float32)[None], (4, 1))
+    c = jnp.stack([jnp.arange(32, dtype=jnp.float32) + 5,
+                   jnp.arange(32, dtype=jnp.float32)])
+    d2, j = ops.centroid_assign(f, c)
+    assert (np.asarray(j) == 1).all()
+    np.testing.assert_allclose(np.asarray(d2), 0.0, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# topk
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,C,k", [
+    (1, 10, 1), (4, 1000, 7), (9, 1000, 60), (130, 1000, 200), (32, 128, 128),
+])
+def test_topk_matches_ref(B, C, k):
+    lg = jax.random.normal(jax.random.PRNGKey(B + C + k), (B, C))
+    v, i = ops.topk(lg, k)
+    vr, ir = ref.topk_ref(lg, k)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(vr), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+
+
+def test_topk_with_ties():
+    lg = jnp.zeros((3, 50))
+    v, i = ops.topk(lg, 5)
+    # ties broken by lowest index, values all equal
+    np.testing.assert_array_equal(np.asarray(i),
+                                  np.tile(np.arange(5), (3, 1)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 40), st.integers(2, 300), st.data())
+def test_topk_property(B, C, data):
+    k = data.draw(st.integers(1, C))
+    lg = jax.random.normal(jax.random.PRNGKey(B * 31 + C), (B, C))
+    v, i = ops.topk(lg, k)
+    v, i = np.asarray(v), np.asarray(i)
+    # descending order, indices valid, values match logits at indices
+    assert (np.diff(v, axis=1) <= 1e-6).all()
+    assert ((i >= 0) & (i < C)).all()
+    np.testing.assert_allclose(np.take_along_axis(np.asarray(lg), i, 1), v,
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,dh,causal", [
+    (16, 16, True), (64, 32, True), (64, 32, False), (128, 64, True),
+    (50, 16, True), (96, 128, False),
+])
+def test_flash_attention_matches_ref(S, dh, causal):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(S + dh), 3)
+    shape = (2, S, 3, dh)
+    q = jax.random.normal(k1, shape)
+    k = jax.random.normal(k2, shape)
+    v = jax.random.normal(k3, shape)
+    out = ops.flash_attention(q, k, v, causal=causal, bq=32, bk=32)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("bq,bk", [(16, 16), (32, 8), (8, 32), (128, 128)])
+def test_flash_attention_block_sweep(bq, bk):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(k1, (1, 64, 2, 32))
+    k = jax.random.normal(k2, (1, 64, 2, 32))
+    v = jax.random.normal(k3, (1, 64, 2, 32))
+    out = ops.flash_attention(q, k, v, causal=True, bq=bq, bk=bk)
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(k1, (2, 32, 2, 32), jnp.bfloat16)
+    k = jax.random.normal(k2, (2, 32, 2, 32), jnp.bfloat16)
+    v = jax.random.normal(k3, (2, 32, 2, 32), jnp.bfloat16)
+    out = ops.flash_attention(q, k, v, causal=True, bq=16, bk=16)
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=3e-2)
+
+
+def test_flash_attention_matches_model_attention():
+    """The kernel plugs into multihead_attention (attn_impl="flash")."""
+    from repro.models import layers as L
+    rng = jax.random.PRNGKey(3)
+    p = L.attn_init(rng, 64, 4, 4, jnp.float32)
+    x = jax.random.normal(rng, (2, 32, 64))
+    out_e = L.multihead_attention(p, x, n_heads=4, n_kv_heads=4, causal=True,
+                                  attn_impl="einsum")
+    out_f = L.multihead_attention(p, x, n_heads=4, n_kv_heads=4, causal=True,
+                                  attn_impl="flash")
+    np.testing.assert_allclose(np.asarray(out_e), np.asarray(out_f),
+                               atol=1e-4)

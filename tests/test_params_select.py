@@ -1,0 +1,77 @@
+"""Parameter selection (§4.4): sweep, Pareto boundary, policy selection."""
+import numpy as np
+import pytest
+
+from repro.core.params import (Candidate, ConfigEval, pareto_boundary,
+                               select, sweep)
+
+
+def _ev(mid, K, T, p, r, ing, q):
+    return ConfigEval(Candidate(mid, K, T), precision=p, recall=r,
+                      ingest_flops=ing, query_flops=q, n_clusters=10,
+                      viable=(p >= 0.95 and r >= 0.95))
+
+
+def test_pareto_removes_dominated():
+    evals = [
+        _ev("a", 2, 1.0, 0.99, 0.99, 10, 10),
+        _ev("b", 2, 1.0, 0.99, 0.99, 12, 12),   # dominated by a
+        _ev("c", 2, 1.0, 0.99, 0.99, 5, 20),
+        _ev("d", 2, 1.0, 0.99, 0.99, 20, 5),
+        _ev("e", 2, 1.0, 0.5, 0.99, 1, 1),      # not viable
+    ]
+    front = pareto_boundary(evals)
+    ids = {e.candidate.model_id for e in front}
+    assert ids == {"a", "c", "d"}
+
+
+def test_select_policies():
+    evals = [
+        _ev("bal", 2, 1.0, 0.99, 0.99, 10, 10),
+        _ev("ing", 2, 1.0, 0.99, 0.99, 2, 40),
+        _ev("qry", 2, 1.0, 0.99, 0.99, 40, 2),
+    ]
+    assert select(evals, "balance").candidate.model_id == "bal"
+    assert select(evals, "opt_ingest").candidate.model_id == "ing"
+    assert select(evals, "opt_query").candidate.model_id == "qry"
+
+
+def test_select_none_when_no_viable():
+    evals = [_ev("a", 2, 1.0, 0.5, 0.5, 1, 1)]
+    assert select(evals, "balance") is None
+
+
+def test_sweep_end_to_end_monotonic_recall_in_K():
+    """Recall is non-decreasing in K (paper Fig. 5)."""
+    from repro.data import get_stream
+    r = np.random.default_rng(0)
+    vs = get_stream("bend", duration_s=40, fps=10)
+    crops, frames, _, labels = vs.objects_array()
+    if len(crops) < 30:
+        pytest.skip("stream too sparse")
+    n_classes = 8
+    classes = np.unique(labels)
+    cls_of = {c: i for i, c in enumerate(classes)}
+    local = np.array([cls_of[c] for c in labels])
+
+    def noisy_apply(crops_in):
+        # stand-in cheap model: correct class gets moderate prob + noise
+        idx = [np.flatnonzero((crops == c).all(axis=(1, 2, 3)))[0]
+               for c in crops_in]
+        probs = r.random((len(crops_in), n_classes)).astype(np.float32)
+        probs[np.arange(len(idx)), local[idx]] += 0.8
+        probs /= probs.sum(1, keepdims=True)
+        feats = np.stack([crops[i].mean(axis=2).ravel()[:32] for i in idx])
+        return probs, feats.astype(np.float32)
+
+    evals = sweep(crops, frames, local, {"m": (noisy_apply, 1e6)},
+                  Ks=[1, 2, 4, 8], Ts=[0.5], gt_flops=1e9,
+                  precision_target=0.9, recall_target=0.9)
+    by_k = {e.candidate.K: e.recall for e in evals}
+    ks = sorted(by_k)
+    rec = [by_k[k] for k in ks]
+    assert all(rec[i] <= rec[i + 1] + 1e-9 for i in range(len(rec) - 1))
+    # query cost grows with K (more candidate clusters)
+    by_k_cost = {e.candidate.K: e.query_flops for e in evals}
+    cost = [by_k_cost[k] for k in ks]
+    assert all(cost[i] <= cost[i + 1] + 1e-9 for i in range(len(cost) - 1))

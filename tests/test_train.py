@@ -1,0 +1,182 @@
+"""Training substrate: optimizer, loop, checkpoint/restart, compression,
+elastic helpers."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import optimizer as opt
+from repro.train import compression as comp
+from repro.train.checkpoint import CheckpointManager
+from repro.train.elastic import StepTimer
+from repro.train.train_loop import TrainConfig, train
+
+
+def _quadratic_problem():
+    """loss = |X w - y|^2 with y in the column span (optimum loss = 0)."""
+    x = jnp.array([[1.0, 2.0], [3.0, 1.0], [0.5, -1.0]])
+    y = x @ jnp.array([[1.0], [-1.0]])       # w* = (1, -1)
+
+    def loss_fn(params, batch, rng):
+        pred = x @ params["w"]
+        l = jnp.mean((pred - y) ** 2)
+        return l, {"l": l}
+
+    params = {"w": jnp.zeros((2, 1))}
+    return loss_fn, params
+
+
+def _iter(batches=None):
+    while True:
+        yield {"dummy": jnp.zeros((4, 1))}
+
+
+def test_adamw_converges():
+    loss_fn, params = _quadratic_problem()
+    cfg = opt.OptConfig(lr=0.1, warmup_steps=5, total_steps=200,
+                        weight_decay=0.0)
+    params2, hist = train(loss_fn, params, _iter(),
+                          cfg, TrainConfig(steps=200, log_every=50))
+    assert hist[-1]["loss"] < 1e-3
+
+
+def test_lr_schedule_shapes():
+    cfg = opt.OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                        schedule="cosine", min_lr_frac=0.1)
+    lrs = [float(opt.lr_at(cfg, s)) for s in range(100)]
+    assert lrs[0] < lrs[9]                      # warmup
+    assert max(lrs) == pytest.approx(1.0, rel=1e-3)
+    assert lrs[-1] < 0.2                        # decayed
+    assert min(lrs[10:]) >= 0.099               # min_lr floor
+
+
+def test_grad_clip():
+    params = {"w": jnp.zeros((2,))}
+    grads = {"w": jnp.array([3e4, 4e4])}
+    state = opt.init(params)
+    cfg = opt.OptConfig(lr=1.0, clip_norm=1.0, warmup_steps=0,
+                        total_steps=10, weight_decay=0.0)
+    _, _, m = opt.update(params, grads, state, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(5e4, rel=1e-3)
+
+
+def test_grad_accumulation_equivalence():
+    """n_microbatches=2 must match a single big batch (linear model)."""
+    x = jnp.arange(8.0).reshape(8, 1)
+
+    def loss_fn(params, batch, rng):
+        l = jnp.mean((batch["x"] * params["w"] - 1.0) ** 2)
+        return l, {}
+
+    params = {"w": jnp.ones((1,))}
+    ocfg = opt.OptConfig(lr=0.01, warmup_steps=0, total_steps=10,
+                         weight_decay=0.0, clip_norm=0.0)
+    from repro.train.train_loop import make_train_step
+    s1 = make_train_step(loss_fn, ocfg, TrainConfig(n_microbatches=1),
+                         donate=False)
+    s2 = make_train_step(loss_fn, ocfg, TrainConfig(n_microbatches=2),
+                         donate=False)
+    st = opt.init(params)
+    rng = jax.random.PRNGKey(0)
+    p1, *_ = s1(params, st, 0, {"x": x}, rng)
+    p2, *_ = s2(params, st, 0, {"x": x}, rng)
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p2["w"]),
+                               rtol=1e-5)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    tree = {"a": np.arange(6).reshape(2, 3), "b": [np.ones(4), np.zeros(2)]}
+    ckpt.save(7, tree, extra={"foo": 1})
+    step, tree2, extra = ckpt.restore()
+    assert step == 7 and extra["foo"] == 1
+    np.testing.assert_array_equal(tree2["a"], tree["a"])
+    np.testing.assert_array_equal(tree2["b"][0], tree["b"][0])
+
+
+def test_checkpoint_prune_keeps_newest(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        ckpt.save(s, {"x": np.array([s])})
+    assert ckpt.all_steps() == [3, 4]
+
+
+def test_train_resume_from_checkpoint(tmp_path):
+    loss_fn, params = _quadratic_problem()
+    ocfg = opt.OptConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                         weight_decay=0.0)
+    ckpt = CheckpointManager(str(tmp_path), async_save=False)
+    # run 50 steps then "crash"
+    p_mid, _ = train(loss_fn, params, _iter(), ocfg,
+                     TrainConfig(steps=50, log_every=25), ckpt=ckpt)
+    assert ckpt.latest_step() == 50
+    # resume to 100 — picks up params + opt state + iterator offset
+    p_end, hist = train(loss_fn, params, _iter(), ocfg,
+                        TrainConfig(steps=100, log_every=25), ckpt=ckpt,
+                        resume=True)
+    assert hist[-1]["loss"] < 1e-3
+    assert hist[0]["step"] > 50      # actually resumed, not restarted
+
+
+def test_compression_bf16_roundtrip():
+    g = {"w": jnp.array([1.0, 1e-3, 300.0])}
+    out = comp.cast_bf16(g)
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(g["w"]),
+                               rtol=1e-2)
+
+
+def test_compression_int8_error_feedback_unbiased():
+    """With error feedback, repeated compression of a constant gradient
+    averages to the true value (residual carries the bias)."""
+    g = {"w": jnp.full((32,), 0.01234)}
+    ef = comp.init_ef_state(g)
+    total = np.zeros(32)
+    n = 50
+    for _ in range(n):
+        deq, ef = comp.apply_ef(g, ef)
+        total += np.asarray(deq["w"])
+    np.testing.assert_allclose(total / n, 0.01234, rtol=2e-2)
+
+
+def test_step_timer_straggler_detection():
+    t = StepTimer(alpha=0.5, straggler_factor=2.0)
+    for dt in (1.0, 1.0, 1.0, 5.0, 1.0):
+        t.observe(dt)
+    assert t.n_stragglers == 1
+
+
+def test_preemption_checkpoint(tmp_path):
+    """Simulated SIGTERM mid-training -> checkpoint written + clean return."""
+    loss_fn, params = _quadratic_problem()
+    ocfg = opt.OptConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                         weight_decay=0.0)
+    ckpt = CheckpointManager(str(tmp_path), async_save=False)
+
+    calls = {"n": 0}
+
+    def hook(m):
+        calls["n"] += 1
+
+    import repro.train.train_loop as tl
+
+    class FakePreempt:
+        def __init__(self, *a, **k):
+            self.steps = 0
+
+        @property
+        def triggered(self):
+            self.steps += 1
+            return self.steps > 10
+
+    orig = tl.PreemptionHandler
+    tl.PreemptionHandler = FakePreempt
+    try:
+        train(loss_fn, params, _iter(), ocfg,
+              TrainConfig(steps=100, log_every=10), ckpt=ckpt)
+    finally:
+        tl.PreemptionHandler = orig
+    step, tree, extra = ckpt.restore()
+    assert extra.get("preempted") is True
+    assert 0 < step < 100
