@@ -19,8 +19,8 @@ def _eval(index, labels, frames, K):
     ps, rs, cost = [], [], []
     for x in dom:
         cids = index.lookup(x, K)
-        matched = [c for c in cids
-                   if labels[index.clusters[c].members[0]] == x]
+        matched = [c for c, fm in zip(cids, index.first_members(cids))
+                   if labels[fm] == x]
         p, r = precision_recall(index.frames_of(matched),
                                 gtf.get(x, np.array([])))
         ps.append(p)

@@ -1,0 +1,100 @@
+"""End-to-end ingest driver throughput (objects/sec).
+
+Measures the full ``ingest()`` hot path — clustering, slot -> cid
+bookkeeping, SoA ClusterStore updates, eviction — with a precomputed
+cheap-CNN stub, isolating the driver from CNN compute exactly as the paper
+pipelines clustering (CPU) behind the CNN (GPU) in §6.3. One record per
+clustering variant is appended to the BENCH_ingest.json trajectory so
+future perf PRs are measured against this one.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.ingest import IngestConfig, ingest
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_ingest.json")
+
+N_OBJECTS = 8192
+FEAT_DIM = 128
+N_CLASSES = 32
+N_MODES = 120
+MAX_CLUSTERS = 1024
+
+
+def _synthetic_stream(seed: int = 0):
+    """Video-shaped object stream: mode-based features (objects re-appear
+    across consecutive frames), tiny crops, soft class probs per mode."""
+    r = np.random.default_rng(seed)
+    modes = r.normal(0, 8.0, (N_MODES, FEAT_DIM))
+    mode_cls = r.integers(0, N_CLASSES, N_MODES)
+    pick = r.integers(0, N_MODES, N_OBJECTS)
+    feats = (modes[pick] + r.normal(0, 0.05, (N_OBJECTS, FEAT_DIM))
+             ).astype(np.float32)
+    probs = np.full((N_OBJECTS, N_CLASSES), 0.02, np.float32)
+    probs[np.arange(N_OBJECTS), mode_cls[pick]] = 0.9
+    probs /= probs.sum(1, keepdims=True)
+    crops = r.normal(0, 1, (N_OBJECTS, 8, 8, 3)).astype(np.float32)
+    frames = np.repeat(np.arange(N_OBJECTS // 8), 8)[:N_OBJECTS]
+    return crops, frames, feats, probs
+
+
+def _append_trajectory(record: dict):
+    history = []
+    if os.path.exists(BENCH_PATH):
+        try:
+            with open(BENCH_PATH) as f:
+                history = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            history = []
+        if not isinstance(history, list):
+            history = []
+    history.append(record)
+    with open(BENCH_PATH, "w") as f:
+        json.dump(history, f, indent=1)
+
+
+def run():
+    crops, frames, feats, probs = _synthetic_stream()
+
+    def make_apply():
+        # precomputed CNN outputs served in stream order (the driver calls
+        # in order over pixel-diff-unique objects; batches never overlap)
+        cursor = [0]
+
+        def apply_fn(batch):
+            i = cursor[0]
+            cursor[0] = i + len(batch)
+            return probs[i:i + len(batch)], feats[i:i + len(batch)]
+        return apply_fn
+
+    record = {"ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+              "n_objects": N_OBJECTS, "variants": {}}
+    for variant in ("scan", "batched", "fused"):
+        cfg = IngestConfig(K=4, threshold=1.0, max_clusters=MAX_CLUSTERS,
+                           batch_size=2048, pixel_diff=False,
+                           clustering=variant)
+        # warmup run: compile everything, then measure a fresh run
+        ingest(crops, frames, make_apply(), 1e9, cfg)
+        t0 = time.perf_counter()
+        index, stats = ingest(crops, frames, make_apply(), 1e9, cfg)
+        wall = time.perf_counter() - t0
+        objs_per_s = N_OBJECTS / wall
+        record["variants"][variant] = {
+            "objects_per_sec": round(objs_per_s, 1),
+            "wall_s": round(wall, 4),
+            "n_clusters": index.n_clusters,
+        }
+        emit(f"ingest.{variant}.{N_OBJECTS}x{FEAT_DIM}", wall * 1e6,
+             f"objs_per_s={objs_per_s:.0f}|n_clusters={index.n_clusters}")
+    _append_trajectory(record)
+
+
+if __name__ == "__main__":
+    run()

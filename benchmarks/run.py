@@ -17,6 +17,7 @@ MODULES = [
     "fig12_frame_sampling",    # Fig. 12/13: frame-rate sensitivity
     "sec67_query_rates",       # §6.7: extreme query rates
     "kernel_bench",            # Pallas kernels + clustering throughput
+    "ingest_bench",            # end-to-end ingest driver objects/sec
 ]
 
 

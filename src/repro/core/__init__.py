@@ -1,6 +1,12 @@
 """Focus core: the paper's contribution (ingest/query split, top-K index,
 clustering, parameter selection, specialization)."""
-from repro.core.index import ClassMap, Cluster, TopKIndex, OTHER  # noqa: F401
+from repro.core.index import (  # noqa: F401
+    ClassMap,
+    Cluster,
+    ClusterStore,
+    TopKIndex,
+    OTHER,
+)
 from repro.core.ingest import IngestConfig, IngestStats, ingest  # noqa: F401
 from repro.core.query import (  # noqa: F401
     BaselineCosts,

@@ -7,7 +7,7 @@ cluster count is bounded by M; when the buffer fills, the *smallest*
 clusters are evicted to the top-K index (handled by the ingest driver
 between batches) — complexity stays O(M·n).
 
-Two implementations:
+Three implementations (DESIGN.md §3):
   * ``cluster_scan``   — canonical sequential semantics via lax.scan
                          (the oracle; exactly the paper's algorithm).
   * ``cluster_batched``— TPU-adapted two-phase variant: the (B, M) distance
@@ -16,13 +16,25 @@ Two implementations:
                          centroid table; objects that match no existing
                          centroid are resolved sequentially within the batch.
                          This exposes the parallelism the paper's CPU loop
-                         lacks (DESIGN.md §3) and is provably equivalent to
-                         ``cluster_scan`` whenever batch objects join
-                         pre-existing clusters (the common case: consecutive
-                         frames of the same object).
+                         lacks and is provably equivalent to ``cluster_scan``
+                         whenever batch objects join pre-existing clusters
+                         (the common case: consecutive frames of the same
+                         object).
+  * ``cluster_fused``  — the vectorized fast path: phase-1 matched objects
+                         fold into their centroids in ONE segment-sum shot
+                         (a batched running-mean update), and the sequential
+                         scan runs only over the gathered *unmatched*
+                         subsequence (typically a small fraction of the
+                         batch) before ids are scattered back. Equivalent to
+                         ``cluster_scan`` on the same inputs where
+                         ``cluster_batched`` is (assignment decisions stable
+                         under within-batch centroid drift): the final
+                         centroid of a fixed member set is its arithmetic
+                         mean, which is fold-order independent.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -100,13 +112,16 @@ def cluster_scan(state: ClusterState, feats, threshold: float):
 def _phase1(centroids, counts, n, feats, threshold):
     """Kernel-backed distances against the batch-start centroid table.
     Dead slots (>= n) are pushed to a far sentinel so the kernel's online
-    argmin never selects them."""
+    argmin never selects them. The threshold compare is fused into the
+    kernel's final grid step (one pass, no host-side compare); the
+    threshold enters the kernel as an SMEM scalar, so sweeping T (§4.4
+    parameter selection) never recompiles."""
     from repro.kernels import ops as kops
     M = centroids.shape[0]
     live = (jnp.arange(M) < n)[:, None]
     masked = jnp.where(live, centroids, 1e9)
-    d2, j = kops.centroid_assign(feats, masked)         # (B,), (B,)
-    matched = d2 <= threshold * threshold
+    d2, j, matched = kops.centroid_assign(feats, masked,
+                                          threshold=threshold)
     return j, matched
 
 
@@ -142,6 +157,95 @@ def _phase2(state, feats, j, matched, threshold):
         return lax.cond(m, fold, slow, st)
 
     return lax.scan(step, state, (feats, j, matched))
+
+
+# ---------------------------------------------------------------------------
+# Fused fast path: segment-sum fold + unmatched-only scan
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _fold_matched(state: ClusterState, feats, j, matched):
+    """Fold every phase-1-matched object into its centroid in one shot.
+
+    Unmatched rows are routed to an overflow segment M that is sliced away,
+    so a single ``segment_sum`` handles the whole batch. The batched
+    running-mean update ``(c·cnt + Σf) / (cnt + k)`` equals k sequential
+    running-mean folds exactly (up to float association).
+    """
+    M = state.centroids.shape[0]
+    seg = jnp.where(matched, j, M)
+    add_cnt = jax.ops.segment_sum(matched.astype(jnp.int32), seg,
+                                  num_segments=M + 1)[:M]
+    feat_sum = jax.ops.segment_sum(feats, seg, num_segments=M + 1)[:M]
+    new_counts = state.counts + add_cnt
+    denom = jnp.maximum(new_counts, 1).astype(jnp.float32)[:, None]
+    folded = (state.centroids * state.counts.astype(jnp.float32)[:, None]
+              + feat_sum) / denom
+    centroids = jnp.where(add_cnt[:, None] > 0, folded, state.centroids)
+    return ClusterState(centroids, new_counts, state.n)
+
+
+@jax.jit
+def _scan_unmatched(state: ClusterState, feats, valid, threshold):
+    """Sequential rule over the gathered unmatched subsequence; padded rows
+    (valid == False) are no-ops and return id -1."""
+    def step(st, inp):
+        f, v = inp
+        new_st, cid = _assign_one(st, f, threshold)
+        st = jax.tree.map(lambda a, b: jnp.where(v, a, b), new_st, st)
+        return st, jnp.where(v, cid, -1)
+
+    return lax.scan(step, state, (feats, valid))
+
+
+def _pad_bucket(n: int) -> int:
+    """Next power of two >= n (min 8): bounds scan recompiles to O(log B)."""
+    p = 8
+    while p < n:
+        p *= 2
+    return p
+
+
+def cluster_fused(state: ClusterState, feats, threshold: float):
+    """Vectorized fast-path clustering. Returns (state, ids (B,)).
+
+    Phase 1 (parallel, MXU): kernel distances + fused threshold -> matched.
+    Matched objects fold into their batch-start centroids via one
+    segment-sum (no scan step for them at all). Phase 2 (scan) runs ONLY
+    over the gathered unmatched subsequence — length U << B in steady-state
+    video — padded to a power-of-two bucket; ids are scattered back into
+    batch order. Equivalent to ``cluster_scan`` wherever ``cluster_batched``
+    is (see module docstring).
+    """
+    feats = jnp.asarray(feats, jnp.float32)
+    B = feats.shape[0]
+    if B == 0:
+        return state, jnp.zeros((0,), jnp.int32)
+    j, matched = _phase1(state.centroids, state.counts, state.n, feats,
+                         jnp.float32(threshold))
+    j_np, matched_np = jax.device_get((j, matched))
+    state = _fold_matched(state, feats, j, matched)
+
+    ids = j_np.astype(np.int32)
+    unmatched_idx = np.nonzero(~matched_np)[0]
+    U = len(unmatched_idx)
+    if U:
+        P = _pad_bucket(U)
+        gather = np.zeros((P,), np.int64)
+        gather[:U] = unmatched_idx
+        sub = feats[jnp.asarray(gather)]
+        valid = jnp.asarray(np.arange(P) < U)
+        state, sub_ids = _scan_unmatched(state, sub, valid,
+                                         jnp.float32(threshold))
+        ids[unmatched_idx] = np.asarray(sub_ids)[:U]
+    return state, jnp.asarray(ids)
+
+
+CLUSTER_FNS = {
+    "scan": cluster_scan,
+    "batched": cluster_batched,
+    "fused": cluster_fused,
+}
 
 
 # ---------------------------------------------------------------------------

@@ -12,12 +12,21 @@ Kx <= K uses rank information stored at ingest.
 When the ingest CNN is *specialized* (§4.3), the index stores local class ids
 (0..Ls-1 plus OTHER) and a ClassMap translates query-time global classes;
 querying a class outside the specialized set routes to the OTHER clusters.
+
+Storage is an array-backed SoA ``ClusterStore`` (DESIGN.md §4): centroids
+(M, D), mean_probs (M, C), counts (M,), rep_crops (M, R, R, 3), plus an
+append-only member/frame log compiled lazily into CSR form. Ingest-side
+bookkeeping is batched (``add_batch``/``attach``) — no per-object Python
+loop — and query-side ``_build``/``lookup`` are one vectorized
+``argpartition`` over the (M, C) mean-probs matrix. The per-object
+``Cluster`` dataclass remains as a compatibility view (``index.clusters``)
+and as the unit of ``add_cluster``.
 """
 from __future__ import annotations
 
 import json
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Iterator, List, Mapping, Optional, Sequence
 
 import numpy as np
 
@@ -49,6 +58,9 @@ class ClassMap:
 
 @dataclass
 class Cluster:
+    """Per-cluster record. Still the unit of ``add_cluster`` and the
+    materialization type of the ``index.clusters`` view; bulk ingest goes
+    through ``ClusterStore.add_batch`` instead of per-object ``add``."""
     cluster_id: int
     centroid: np.ndarray                 # feature vector (D,)
     rep_crop: np.ndarray                 # centroid object's crop (for GT-CNN)
@@ -74,6 +86,266 @@ class Cluster:
         return part[np.argsort(-self.mean_probs[part])]
 
 
+def _grow(arr: Optional[np.ndarray], need: int, row_shape, dtype):
+    """Amortized doubling of the leading axis; returns array with >= need
+    rows (contents of live rows preserved)."""
+    cap = 0 if arr is None else arr.shape[0]
+    if cap >= need:
+        return arr
+    new_cap = max(64, cap * 2)
+    while new_cap < need:
+        new_cap *= 2
+    out = np.zeros((new_cap, *row_shape), dtype)
+    if arr is not None:
+        out[:cap] = arr
+    return out
+
+
+class ClusterStore:
+    """SoA cluster storage: all per-cluster scalars/vectors live in flat
+    arrays indexed by row, with a dict only for the cid -> row map. The
+    member/frame log is append-only (one entry per object) and compiled to
+    CSR on demand for member listing; ``frames_of`` works straight off the
+    flat log."""
+
+    def __init__(self):
+        self.n_rows = 0
+        self.centroids: Optional[np.ndarray] = None     # (cap, D) f32
+        self.mean_probs: Optional[np.ndarray] = None    # (cap, C) f32
+        self.counts = np.zeros((0,), np.int64)          # (cap,)
+        self.rep_crops: Optional[np.ndarray] = None     # (cap, *crop_shape)
+        self.first_objs = np.zeros((0,), np.int64)      # first member id
+        self.row_cids = np.zeros((0,), np.int64)        # row -> cid
+        self._cid_to_row: Dict[int, int] = {}
+        # member/frame log
+        self.m_n = 0
+        self._m_rows = np.zeros((0,), np.int64)
+        self._m_objs = np.zeros((0,), np.int64)
+        self._m_frames = np.zeros((0,), np.int64)
+        self._csr = None                                # (order, indptr)
+        self._sorter = None                             # argsort of row_cids
+
+    # -- rows ------------------------------------------------------------------
+
+    def row_of(self, cid: int) -> int:
+        return self._cid_to_row[cid]
+
+    def rows_of(self, cids) -> np.ndarray:
+        """Vectorized cid -> row map; raises KeyError on unknown cids (the
+        dict-era contract)."""
+        cids = np.asarray(cids, np.int64)
+        if len(cids) == 0:
+            return np.zeros((0,), np.int64)
+        if self.n_rows == 0:
+            raise KeyError(f"unknown cluster ids: {cids.tolist()[:5]}")
+        rc = self.row_cids[:self.n_rows]
+        if self._sorter is None:
+            self._sorter = np.argsort(rc, kind="stable")
+        pos = np.searchsorted(rc, cids, sorter=self._sorter)
+        rows = self._sorter[np.minimum(pos, self.n_rows - 1)]
+        bad = rc[rows] != cids
+        if bad.any():
+            raise KeyError(f"unknown cluster ids: "
+                           f"{np.unique(cids[bad]).tolist()[:5]}")
+        return rows
+
+    def _new_rows(self, cids: np.ndarray, feat_dim: int, n_classes: int,
+                  crop_shape) -> np.ndarray:
+        """Allocate rows for cids (must be unseen); returns row ids.
+        ``crop_shape=None`` defers rep_crop storage until a crop-bearing
+        add supplies the shape (rows allocated before that read as
+        zero crops)."""
+        k = len(cids)
+        need = self.n_rows + k
+        self.centroids = _grow(self.centroids, need, (feat_dim,), np.float32)
+        self.mean_probs = _grow(self.mean_probs, need, (n_classes,),
+                                np.float32)
+        self.counts = _grow(self.counts, need, (), np.int64)
+        if crop_shape is not None or self.rep_crops is not None:
+            if crop_shape is None:
+                crop_shape = self.rep_crops.shape[1:]
+            self.rep_crops = _grow(self.rep_crops, need, crop_shape,
+                                   np.float32)
+        self.first_objs = _grow(self.first_objs, need, (), np.int64)
+        self.row_cids = _grow(self.row_cids, need, (), np.int64)
+        rows = np.arange(self.n_rows, need, dtype=np.int64)
+        self.row_cids[rows] = cids
+        for c, r in zip(cids.tolist(), rows.tolist()):
+            self._cid_to_row[c] = r
+        self.n_rows = need
+        self._sorter = None
+        self._csr = None          # indptr must cover the new rows
+        return rows
+
+    def _append_log(self, rows: np.ndarray, obj_ids: np.ndarray,
+                    frame_ids: np.ndarray):
+        k = len(rows)
+        need = self.m_n + k
+        self._m_rows = _grow(self._m_rows, need, (), np.int64)
+        self._m_objs = _grow(self._m_objs, need, (), np.int64)
+        self._m_frames = _grow(self._m_frames, need, (), np.int64)
+        self._m_rows[self.m_n:need] = rows
+        self._m_objs[self.m_n:need] = obj_ids
+        self._m_frames[self.m_n:need] = frame_ids
+        self.m_n = need
+        self._csr = None
+
+    # -- batched ingest --------------------------------------------------------
+
+    def add_batch(self, cids: np.ndarray, feats: np.ndarray,
+                  probs: np.ndarray, obj_ids: np.ndarray,
+                  frame_ids: np.ndarray, crops: Optional[np.ndarray] = None):
+        """Fold a batch of objects into their clusters — vectorized.
+
+        cids (B,) may repeat; unseen cids get fresh rows whose rep_crop is
+        the first occurrence's crop. Running means are updated with one
+        segment-sum per array: for a row with prior count c receiving k new
+        values, new_mean = (c·mean + Σx) / (c + k) — exactly k sequential
+        running-mean folds.
+        """
+        cids = np.asarray(cids, np.int64)
+        if len(cids) == 0:
+            return
+        obj_ids = np.asarray(obj_ids, np.int64)
+        frame_ids = np.asarray(frame_ids, np.int64)
+        feats = np.asarray(feats, np.float32)
+        probs = np.asarray(probs, np.float32)
+
+        # allocate rows for first-seen cids, in first-occurrence order
+        uniq, first_pos = np.unique(cids, return_index=True)
+        fresh_mask = np.array([c not in self._cid_to_row
+                               for c in uniq.tolist()])
+        if fresh_mask.any():
+            order = np.argsort(first_pos[fresh_mask], kind="stable")
+            fresh_cids = uniq[fresh_mask][order]
+            fresh_first = first_pos[fresh_mask][order]
+            if crops is not None:
+                crop_shape = crops.shape[1:]
+            elif self.rep_crops is not None:
+                crop_shape = self.rep_crops.shape[1:]   # keep existing shape
+            else:
+                crop_shape = None                       # defer until known
+            rows = self._new_rows(fresh_cids, feats.shape[1], probs.shape[1],
+                                  crop_shape)
+            if crops is not None:
+                self.rep_crops[rows] = crops[fresh_first]
+            self.first_objs[rows] = obj_ids[fresh_first]
+
+        b_rows = self.rows_of(cids)
+        # segment-sum over the *touched* rows only: O(B + k·(D+C)) per
+        # batch, independent of total store size (evicted clusters stay in
+        # the index, so n_rows grows without bound over a long stream)
+        touched, inv = np.unique(b_rows, return_inverse=True)
+        k = len(touched)
+        add_cnt = np.bincount(inv, minlength=k).astype(np.int64)
+        feat_sum = np.zeros((k, feats.shape[1]), np.float64)
+        np.add.at(feat_sum, inv, feats.astype(np.float64))
+        prob_sum = np.zeros((k, probs.shape[1]), np.float64)
+        np.add.at(prob_sum, inv, probs.astype(np.float64))
+
+        old_cnt = self.counts[touched]
+        new_cnt = old_cnt + add_cnt
+        denom = new_cnt.astype(np.float64)[:, None]
+        self.centroids[touched] = (
+            (self.centroids[touched] * old_cnt[:, None] + feat_sum)
+            / denom).astype(np.float32)
+        self.mean_probs[touched] = (
+            (self.mean_probs[touched] * old_cnt[:, None] + prob_sum)
+            / denom).astype(np.float32)
+        self.counts[touched] = new_cnt
+        self._append_log(b_rows, obj_ids, frame_ids)
+
+    def attach(self, cids: np.ndarray, obj_ids: np.ndarray,
+               frame_ids: np.ndarray):
+        """Attach members without moving centroids/probs (pixel-diff
+        duplicates share their root's cluster, §4.2)."""
+        cids = np.asarray(cids, np.int64)
+        if len(cids) == 0:
+            return
+        rows = self.rows_of(cids)
+        uniq, cnt = np.unique(rows, return_counts=True)
+        self.counts[uniq] += cnt
+        self._append_log(rows, np.asarray(obj_ids, np.int64),
+                         np.asarray(frame_ids, np.int64))
+
+    # -- reads -----------------------------------------------------------------
+
+    def _build_csr(self):
+        if self._csr is None:
+            rows = self._m_rows[:self.m_n]
+            order = np.argsort(rows, kind="stable")
+            counts = np.bincount(rows, minlength=self.n_rows)
+            indptr = np.zeros(self.n_rows + 1, np.int64)
+            np.cumsum(counts, out=indptr[1:])
+            self._csr = (order, indptr)
+        return self._csr
+
+    def drop_log_of(self, row: int):
+        """Remove a row's member/frame log entries (cluster replacement —
+        rare, O(log size))."""
+        keep = self._m_rows[:self.m_n] != row
+        kept = int(keep.sum())
+        self._m_rows[:kept] = self._m_rows[:self.m_n][keep]
+        self._m_objs[:kept] = self._m_objs[:self.m_n][keep]
+        self._m_frames[:kept] = self._m_frames[:self.m_n][keep]
+        self.m_n = kept
+        self._csr = None
+
+    def members_of(self, row: int):
+        order, indptr = self._build_csr()
+        sel = order[indptr[row]:indptr[row + 1]]
+        return self._m_objs[sel], self._m_frames[sel]
+
+    def frames_of_rows(self, rows: np.ndarray) -> np.ndarray:
+        """Union of frame ids over the given rows — O(selected members) via
+        the cached CSR, not a scan of the whole log."""
+        order, indptr = self._build_csr()
+        if len(rows) == 0:
+            return np.array([], np.int64)
+        sel = np.concatenate([order[indptr[r]:indptr[r + 1]] for r in rows])
+        return np.unique(self._m_frames[sel]).astype(np.int64)
+
+
+class _ViewCluster(Cluster):
+    """Materialized snapshot handed out by ``index.clusters``; writes do not
+    reach the store, so the mutating entry point fails loudly."""
+
+    def add(self, *a, **kw):
+        raise TypeError(
+            "index.clusters[...] is a read-only snapshot; ingest through "
+            "TopKIndex.add_batch/attach/add_cluster instead")
+
+
+class _ClustersView(Mapping):
+    """Read-only dict-like view materializing ``Cluster`` records from the
+    SoA store on access (compat for ``index.clusters[cid].members[0]``-style
+    callers; hot paths should use the vectorized TopKIndex methods)."""
+
+    def __init__(self, store: ClusterStore):
+        self._store = store
+
+    def __getitem__(self, cid: int) -> Cluster:
+        s = self._store
+        row = s._cid_to_row[cid]
+        members, frames = s.members_of(row)
+        return _ViewCluster(
+            cluster_id=int(cid),
+            centroid=s.centroids[row],
+            rep_crop=(s.rep_crops[row] if s.rep_crops is not None
+                      else np.zeros((0,), np.float32)),
+            mean_probs=s.mean_probs[row],
+            count=int(s.counts[row]),
+            members=members.tolist(),
+            frames=frames.tolist(),
+        )
+
+    def __len__(self) -> int:
+        return self._store.n_rows
+
+    def __iter__(self) -> Iterator[int]:
+        return iter(self._store.row_cids[:self._store.n_rows].tolist())
+
+
 class TopKIndex:
     """class -> clusters inverted index, built at ingest time."""
 
@@ -82,85 +354,151 @@ class TopKIndex:
         self.K = K
         self.n_local_classes = n_local_classes
         self.class_map = class_map
-        self.clusters: Dict[int, Cluster] = {}
-        self._inverted: Optional[Dict[int, List[int]]] = None
+        self.store = ClusterStore()
+        self._ranks: Optional[np.ndarray] = None   # (M, C) int32; K = miss
+
+    @property
+    def clusters(self) -> _ClustersView:
+        return _ClustersView(self.store)
 
     # -- ingest-side -----------------------------------------------------------
 
     def add_cluster(self, cluster: Cluster):
-        self.clusters[cluster.cluster_id] = cluster
-        self._inverted = None
+        s = self.store
+        if cluster.cluster_id in s._cid_to_row:
+            # dict-era semantics: re-adding a cid replaces the cluster
+            row = s._cid_to_row[cluster.cluster_id]
+            s.drop_log_of(row)
+        else:
+            row = s._new_rows(np.array([cluster.cluster_id], np.int64),
+                              len(cluster.centroid),
+                              len(cluster.mean_probs),
+                              cluster.rep_crop.shape)[0]
+        s.centroids[row] = cluster.centroid
+        s.mean_probs[row] = cluster.mean_probs
+        s.rep_crops[row] = cluster.rep_crop
+        s.counts[row] = cluster.count
+        if cluster.members:
+            s.first_objs[row] = cluster.members[0]
+            s._append_log(np.full(len(cluster.members), row, np.int64),
+                          np.asarray(cluster.members, np.int64),
+                          np.asarray(cluster.frames, np.int64))
+        self._ranks = None
+
+    def add_batch(self, cids, feats, probs, obj_ids, frame_ids, crops=None):
+        self.store.add_batch(cids, feats, probs, obj_ids, frame_ids, crops)
+        self._ranks = None
+
+    def attach(self, cids, obj_ids, frame_ids):
+        self.store.attach(cids, obj_ids, frame_ids)
 
     # -- query-side ------------------------------------------------------------
 
     def _build(self):
-        inv: Dict[int, List[int]] = {}
-        ranks: Dict[int, Dict[int, int]] = {}
-        for cid, cl in self.clusters.items():
-            for rank, c in enumerate(cl.topk(self.K)):
-                inv.setdefault(int(c), []).append(cid)
-                ranks.setdefault(cid, {})[int(c)] = rank
-        self._inverted = inv
+        """Rank matrix (M, C): rank of class c in cluster m's top-K mean
+        probs, or K when c is outside the top-K — one argpartition over the
+        whole store instead of a per-cluster Python loop."""
+        s = self.store
+        M = s.n_rows
+        if M == 0:
+            self._ranks = np.zeros((0, 0), np.int32)
+            return
+        P = s.mean_probs[:M]
+        C = P.shape[1]
+        K = min(self.K, C)
+        if K < C:
+            part = np.argpartition(-P, K - 1, axis=1)[:, :K]
+        else:
+            part = np.broadcast_to(np.arange(C), (M, C)).copy()
+        vals = np.take_along_axis(P, part, 1)
+        order = np.argsort(-vals, axis=1, kind="stable")
+        top = np.take_along_axis(part, order, 1)       # (M, K)
+        ranks = np.full((M, C), K, np.int32)
+        np.put_along_axis(ranks, top,
+                          np.broadcast_to(np.arange(K, dtype=np.int32),
+                                          (M, K)), 1)
         self._ranks = ranks
 
     def lookup(self, global_class: int, Kx: Optional[int] = None) -> List[int]:
         """Cluster ids whose top-Kx (local) classes include the queried class."""
-        if self._inverted is None:
+        if self._ranks is None:
             self._build()
         Kx = Kx or self.K
         local = (self.class_map.to_local(global_class)
                  if self.class_map is not None else global_class)
-        cids = self._inverted.get(local, [])
-        return [cid for cid in cids if self._ranks[cid][local] < Kx]
+        if self._ranks.size == 0 or not 0 <= local < self._ranks.shape[1]:
+            return []
+        rows = np.nonzero(self._ranks[:, local] < min(Kx, self.K))[0]
+        return self.store.row_cids[rows].tolist()
 
     def frames_of(self, cids: Sequence[int]) -> np.ndarray:
-        out = set()
-        for cid in cids:
-            out.update(self.clusters[cid].frames)
-        return np.array(sorted(out), dtype=np.int64)
+        if len(cids) == 0:
+            return np.array([], np.int64)
+        return self.store.frames_of_rows(self.store.rows_of(cids))
 
     def rep_crops(self, cids: Sequence[int]) -> np.ndarray:
-        return np.stack([self.clusters[cid].rep_crop for cid in cids])
+        if self.store.rep_crops is None:
+            raise ValueError("no representative crops were stored "
+                             "(add_batch was called without crops)")
+        return self.store.rep_crops[self.store.rows_of(cids)]
+
+    def first_members(self, cids: Sequence[int]) -> np.ndarray:
+        """First (centroid-representative) object id per cluster —
+        vectorized fast path for ``clusters[cid].members[0]``."""
+        return self.store.first_objs[self.store.rows_of(cids)]
 
     # -- stats / persistence ---------------------------------------------------
 
     @property
     def n_clusters(self) -> int:
-        return len(self.clusters)
+        return self.store.n_rows
 
     @property
     def n_objects(self) -> int:
-        return sum(c.count for c in self.clusters.values())
+        return int(self.store.counts[:self.store.n_rows].sum())
 
     def summary(self) -> dict:
-        if self._inverted is None:
+        if self._ranks is None:
             self._build()
+        if self._ranks.size:
+            K = min(self.K, self._ranks.shape[1])
+            n_indexed = int((self._ranks < K).any(axis=0).sum())
+        else:
+            n_indexed = 0
         return {
             "K": self.K,
             "n_clusters": self.n_clusters,
             "n_objects": self.n_objects,
-            "n_classes_indexed": len(self._inverted),
+            "n_classes_indexed": n_indexed,
             "specialized": self.class_map is not None,
         }
 
     def save(self, path: str):
-        """Persist index metadata + arrays (MongoDB stand-in, §5)."""
+        """Persist index metadata + arrays (MongoDB stand-in, §5). On-disk
+        format unchanged from the Dict[int, Cluster] era."""
+        s = self.store
+        meta_clusters = {}
+        arrays = {}
+        for row in range(s.n_rows):
+            cid = int(s.row_cids[row])
+            members, frames = s.members_of(row)
+            meta_clusters[str(cid)] = {
+                "count": int(s.counts[row]),
+                "members": members.tolist(),
+                "frames": frames.tolist(),
+            }
+            arrays[f"centroid_{cid}"] = s.centroids[row]
+            arrays[f"probs_{cid}"] = s.mean_probs[row]
+            arrays[f"crop_{cid}"] = (s.rep_crops[row]
+                                     if s.rep_crops is not None
+                                     else np.zeros((0,), np.float32))
         meta = {
             "K": self.K,
             "n_local_classes": self.n_local_classes,
             "class_map": (self.class_map.global_ids.tolist()
                           if self.class_map else None),
-            "clusters": {
-                str(cid): {"count": c.count, "members": c.members,
-                           "frames": c.frames}
-                for cid, c in self.clusters.items()
-            },
+            "clusters": meta_clusters,
         }
-        arrays = {}
-        for cid, c in self.clusters.items():
-            arrays[f"centroid_{cid}"] = c.centroid
-            arrays[f"probs_{cid}"] = c.mean_probs
-            arrays[f"crop_{cid}"] = c.rep_crop
         np.savez_compressed(path + ".npz", **arrays)
         with open(path + ".json", "w") as f:
             json.dump(meta, f)
@@ -175,9 +513,8 @@ class TopKIndex:
         idx = cls(meta["K"], meta["n_local_classes"], cmap)
         for cid_s, info in meta["clusters"].items():
             cid = int(cid_s)
-            cl = Cluster(cid, arrays[f"centroid_{cid}"],
-                         arrays[f"crop_{cid}"], arrays[f"probs_{cid}"],
-                         count=info["count"], members=info["members"],
-                         frames=info["frames"])
-            idx.clusters[cid] = cl
+            idx.add_cluster(Cluster(
+                cid, arrays[f"centroid_{cid}"], arrays[f"crop_{cid}"],
+                arrays[f"probs_{cid}"], count=info["count"],
+                members=info["members"], frames=info["frames"]))
         return idx

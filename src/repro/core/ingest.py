@@ -4,20 +4,22 @@ detected objects -> pixel-diff dedup -> cheap CNN (top-K probs + features)
                  -> incremental clustering -> top-K index
 
 The CNN and clustering run batched on the accelerator (Pallas kernels on
-TPU); cluster bookkeeping (member lists, frame ids, eviction) is host-side,
-mirroring the paper's CPU/GPU pipelining (§6.3: clustering runs on CPUs of
-the ingest machine, fully pipelined with the GPUs running the CNN).
+TPU); cluster bookkeeping (member lists, frame ids, eviction) is host-side
+and fully batched through the SoA ``ClusterStore`` — there is no per-object
+Python loop anywhere on the hot path, mirroring the paper's CPU/GPU
+pipelining (§6.3: clustering runs on CPUs of the ingest machine, fully
+pipelined with the GPUs running the CNN).
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import numpy as np
 
 from repro.core import clustering as C
-from repro.core.index import ClassMap, Cluster, TopKIndex
+from repro.core.index import ClassMap, TopKIndex
 from repro.data.bgsub import pixel_difference
 
 
@@ -31,7 +33,7 @@ class IngestConfig:
     pixel_diff_threshold: float = 0.02
     evict_frac: float = 0.25
     high_water: float = 0.95        # evict when n >= high_water * M
-    batched_clustering: bool = True # two-phase TPU variant vs pure scan
+    clustering: str = "fused"       # "scan" | "batched" | "fused"
 
 
 @dataclass
@@ -85,6 +87,8 @@ def ingest(crops: np.ndarray, frames: np.ndarray,
     """Build the top-K index for a stream of detected objects.
 
     cheap_apply(crops (B,R,R,3)) -> (probs (B, C_local), feats (B, D)).
+    Feature/class dims are derived from the first real batch — no extra
+    shape-probe CNN invocation, and every CNN pass is counted in the stats.
     """
     t0 = time.perf_counter()
     stats = IngestStats(n_objects=len(crops))
@@ -94,22 +98,17 @@ def ingest(crops: np.ndarray, frames: np.ndarray,
     unique_ids = np.nonzero(roots == np.arange(len(crops)))[0]
     stats.n_pixel_dedup = len(crops) - len(unique_ids)
 
-    # probe class count
-    if n_local_classes is None:
-        probs0, feats0 = cheap_apply(crops[:1])
-        n_local_classes = probs0.shape[1]
-        feat_dim = feats0.shape[1]
-    else:
-        _, feats0 = cheap_apply(crops[:1])
-        feat_dim = feats0.shape[1]
-
-    index = TopKIndex(cfg.K, n_local_classes, class_map)
-    state = C.init_state(cfg.max_clusters, feat_dim)
-    slot_to_cid: Dict[int, int] = {}
-    obj_to_cid: Dict[int, int] = {}
+    index: Optional[TopKIndex] = None
+    state = None                               # lazy: dims from first batch
+    slot_cid = np.full(cfg.max_clusters, -1, np.int64)   # slot -> cid
+    obj_cid = np.full(len(crops), -1, np.int64)          # object -> cid
     next_cid = 0
-    cluster_fn = (C.cluster_batched if cfg.batched_clustering
-                  else C.cluster_scan)
+    try:
+        cluster_fn = C.CLUSTER_FNS[cfg.clustering]
+    except KeyError:
+        raise ValueError(
+            f"unknown clustering variant {cfg.clustering!r}; "
+            f"expected one of {sorted(C.CLUSTER_FNS)}") from None
 
     for start in range(0, len(unique_ids), cfg.batch_size):
         batch_ids = unique_ids[start:start + cfg.batch_size]
@@ -120,46 +119,47 @@ def ingest(crops: np.ndarray, frames: np.ndarray,
         stats.n_cnn_invocations += len(batch_ids)
         stats.cheap_flops += len(batch_ids) * cheap_flops_per_image
 
-        n_before = int(state.n)
+        if index is None:
+            if n_local_classes is None:
+                n_local_classes = probs.shape[1]
+            index = TopKIndex(cfg.K, n_local_classes, class_map)
+            state = C.init_state(cfg.max_clusters, feats.shape[1])
+
         state, slots = cluster_fn(state, feats, cfg.threshold)
         slots = np.asarray(slots)
 
-        for i, (oid, slot) in enumerate(zip(batch_ids, slots)):
-            slot = int(slot)
-            cid = slot_to_cid.get(slot)
-            if cid is None:                       # fresh cluster slot
-                cid = next_cid
-                next_cid += 1
-                slot_to_cid[slot] = cid
-                index.add_cluster(Cluster(
-                    cid, centroid=feats[i].copy(),
-                    rep_crop=batch_crops[i].copy(),
-                    mean_probs=np.zeros((n_local_classes,), np.float32)))
-            cl = index.clusters[cid]
-            cl.add(int(oid), int(frames[oid]), feats[i], probs[i],
-                   crop=batch_crops[i])
-            obj_to_cid[int(oid)] = cid
+        # slot -> cid, assigning fresh cids in first-appearance order
+        unmapped = slot_cid[slots] < 0
+        if unmapped.any():
+            new_slots, first_pos = np.unique(slots[unmapped],
+                                             return_index=True)
+            order = np.argsort(first_pos, kind="stable")
+            slot_cid[new_slots[order]] = next_cid + np.arange(len(new_slots))
+            next_cid += len(new_slots)
+        cids = slot_cid[slots]
+        obj_cid[batch_ids] = cids
+
+        index.add_batch(cids, feats, probs, batch_ids, frames[batch_ids],
+                        crops=batch_crops)
 
         # eviction keeps the live table at M (paper: evict smallest)
         if int(state.n) >= int(cfg.high_water * cfg.max_clusters):
             state, evicted, remap = C.evict_smallest(state, cfg.evict_frac)
             stats.n_evictions += len(evicted)
-            new_map: Dict[int, int] = {}
-            for old_slot, cid in slot_to_cid.items():
-                ns = int(remap[old_slot])
-                if ns >= 0:
-                    new_map[ns] = cid
-            slot_to_cid = new_map
+            new_slot_cid = np.full_like(slot_cid, -1)
+            live = remap >= 0
+            new_slot_cid[remap[live]] = slot_cid[live]
+            slot_cid = new_slot_cid
 
-    # attach pixel-diff duplicates to their root's cluster
-    for oid in np.nonzero(roots != np.arange(len(crops)))[0]:
-        cid = obj_to_cid.get(int(roots[oid]))
-        if cid is None:
-            continue
-        cl = index.clusters[cid]
-        cl.members.append(int(oid))
-        cl.frames.append(int(frames[oid]))
-        cl.count += 1
+    if index is None:        # empty stream
+        index = TopKIndex(cfg.K, n_local_classes or 0, class_map)
+
+    # attach pixel-diff duplicates to their root's cluster (batched)
+    dup = np.nonzero(roots != np.arange(len(crops)))[0]
+    if len(dup):
+        root_cids = obj_cid[roots[dup]]
+        valid = root_cids >= 0
+        index.attach(root_cids[valid], dup[valid], frames[dup[valid]])
 
     stats.wall_s = time.perf_counter() - t0
     return index, stats

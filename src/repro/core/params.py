@@ -54,8 +54,9 @@ def _simulate_queries(index: TopKIndex, gt_labels: np.ndarray,
     ps, rs, costs = [], [], []
     for x in classes:
         cids = index.lookup(x, Kx)
-        matched = [cid for cid in cids
-                   if gt_labels[index.clusters[cid].members[0]] == x]
+        firsts = index.first_members(cids)
+        matched = [cid for cid, fm in zip(cids, firsts)
+                   if gt_labels[fm] == x]
         result = index.frames_of(matched)
         p, r = precision_recall(result, gt_by_class.get(x, np.array([])))
         ps.append(p)

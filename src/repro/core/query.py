@@ -40,12 +40,10 @@ def query(index: TopKIndex, global_class: int,
     matched: List[int] = []
     n_gt = 0
     for start in range(0, len(cids), batch_size):
-        chunk = cids[start:start + batch_size]
+        chunk = np.asarray(cids[start:start + batch_size])
         labels = np.asarray(gt_apply(index.rep_crops(chunk)))
         n_gt += len(chunk)
-        for cid, lab in zip(chunk, labels):
-            if int(lab) == global_class:
-                matched.append(cid)
+        matched.extend(chunk[labels == global_class].tolist())
     frames = index.frames_of(matched)
     return QueryResult(
         queried_class=global_class, frames=frames, matched_clusters=matched,

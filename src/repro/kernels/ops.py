@@ -18,10 +18,24 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def centroid_assign(feats, centroids, *, bb: int = 128, bm: int = 128):
-    """(B, D), (M, D) -> (min squared-L2 (B,), argmin (B,))."""
+def centroid_assign(feats, centroids, *, bb: int | None = None,
+                    bm: int | None = None,
+                    threshold: float | None = None):
+    """(B, D), (M, D) -> (min squared-L2 (B,), argmin (B,)).
+
+    With ``threshold`` set, also returns the fused ``matched (B,) bool``
+    mask (``min_d2 <= threshold**2``), emitted by the kernel itself.
+
+    Default tiles: 128x128 on TPU (sized for VMEM); in interpret mode the
+    tiles cover the whole problem (the per-grid-step interpreter dispatch
+    dominates there, and "VMEM" blocks are ordinary host arrays)."""
+    interp = _interpret()
+    if bb is None:
+        bb = 4096 if interp else 128
+    if bm is None:
+        bm = 1024 if interp else 128
     return _ca.centroid_assign(feats, centroids, bb=bb, bm=bm,
-                               interpret=_interpret())
+                               threshold=threshold, interpret=interp)
 
 
 def topk(logits, k: int, *, bb: int = 128):

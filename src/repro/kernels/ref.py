@@ -8,10 +8,11 @@ import jax
 import jax.numpy as jnp
 
 
-def centroid_assign_ref(feats, centroids):
+def centroid_assign_ref(feats, centroids, threshold=None):
     """feats (B, D), centroids (M, D) -> (min_d2 (B,) f32, argmin (B,) i32).
 
-    Squared L2 distance to the nearest centroid row.
+    Squared L2 distance to the nearest centroid row. With ``threshold``,
+    also returns ``matched = min_d2 <= threshold**2`` (B,) bool.
     """
     f = feats.astype(jnp.float32)
     c = centroids.astype(jnp.float32)
@@ -19,7 +20,10 @@ def centroid_assign_ref(feats, centroids):
           - 2.0 * f @ c.T
           + jnp.sum(c * c, axis=1)[None, :])
     j = jnp.argmin(d2, axis=1).astype(jnp.int32)
-    return jnp.take_along_axis(d2, j[:, None].astype(jnp.int32), 1)[:, 0], j
+    mind2 = jnp.take_along_axis(d2, j[:, None].astype(jnp.int32), 1)[:, 0]
+    if threshold is None:
+        return mind2, j
+    return mind2, j, mind2 <= jnp.float32(threshold) ** 2
 
 
 def topk_ref(logits, k: int):

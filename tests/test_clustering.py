@@ -101,6 +101,90 @@ def test_eviction_compacts_and_remaps():
                                    np.asarray(state.centroids[s]))
 
 
+# ---------------------------------------------------------------------------
+# cluster_fused ≡ cluster_scan (the fast-path equivalence contract)
+# ---------------------------------------------------------------------------
+
+def _assert_state_eq(sa, sb, atol=1e-4):
+    assert int(sa.n) == int(sb.n)
+    np.testing.assert_array_equal(np.asarray(sa.counts),
+                                  np.asarray(sb.counts))
+    np.testing.assert_allclose(np.asarray(sa.centroids),
+                               np.asarray(sb.centroids), atol=atol)
+
+
+def _run_both(state, f, T):
+    sa, ia = C.cluster_scan(state, f, T)
+    sb, ib = C.cluster_fused(state, f, T)
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+    _assert_state_eq(sa, sb)
+    return sa
+
+
+def test_fused_equals_scan_all_match():
+    """Warm table, tight modes, loose threshold: every object folds."""
+    f, _ = _feats(96, 16, seed=7, spread=8.0)
+    st0 = C.init_state(64, 16)
+    st0, _ = C.cluster_scan(st0, f[:32], 2.0)
+    sa, ia = C.cluster_scan(st0, f[32:], 2.0)
+    sb, ib = C.cluster_fused(st0, f[32:], 2.0)
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+    _assert_state_eq(sa, sb)
+    assert int(sa.n) == int(st0.n)            # genuinely all-match
+
+
+def test_fused_equals_scan_none_match():
+    """Empty table / tiny threshold: the whole batch takes the slow path."""
+    f = np.random.default_rng(11).normal(0, 10, (40, 8)).astype(np.float32)
+    _run_both(C.init_state(64, 8), f, 1e-3)
+
+
+def test_fused_equals_scan_mixed():
+    """Some objects fold, some open new clusters within the batch."""
+    f, _ = _feats(150, 16, seed=5, spread=10.0, n_modes=8)
+    st0 = C.init_state(128, 16)
+    st0, _ = C.cluster_scan(st0, f[:30], 1.5)
+    _run_both(st0, f[30:], 1.5)
+
+
+def test_fused_equals_scan_empty_and_single():
+    st0 = C.init_state(16, 4)
+    s, ids = C.cluster_fused(st0, np.zeros((0, 4), np.float32), 1.0)
+    assert ids.shape == (0,) and int(s.n) == 0
+    _run_both(st0, np.ones((1, 4), np.float32), 1.0)
+
+
+def test_fused_equals_scan_crossing_high_water():
+    """Batch drives the table from nearly-empty past the eviction
+    high-water mark (driver evicts AFTER the batch; within the batch the
+    full-table joins-nearest rule must match scan)."""
+    M = 16
+    r = np.random.default_rng(13)
+    # 24 far-apart points -> fills all 16 slots mid-batch, then the
+    # remaining objects exercise the full-table nearest-join rule
+    f = (r.normal(0, 1, (24, 8)) + np.arange(24)[:, None] * 50.0) \
+        .astype(np.float32)
+    st0 = C.init_state(M, 8)
+    sa = _run_both(st0, f, 1.0)
+    assert int(sa.n) == M                     # crossed the cap
+
+
+def test_fused_equals_batched_video_stream():
+    """Multi-batch video-style stream: fused and batched agree batch by
+    batch once warmed (the regime both are specified for)."""
+    f, _ = _feats(400, 16, seed=21, spread=12.0, n_modes=6)
+    sa = C.init_state(64, 16)
+    sb = C.init_state(64, 16)
+    sa, _ = C.cluster_scan(sa, f[:64], 1.5)
+    sb, _ = C.cluster_scan(sb, f[:64], 1.5)
+    for start in range(64, 400, 64):
+        chunk = f[start:start + 64]
+        sa, ia = C.cluster_batched(sa, chunk, 1.5)
+        sb, ib = C.cluster_fused(sb, chunk, 1.5)
+        np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+    _assert_state_eq(sa, sb)
+
+
 def test_buffer_full_joins_nearest():
     state = C.init_state(2, 2)
     f = np.array([[0, 0], [10, 10], [5, 5]], np.float32)

@@ -70,6 +70,157 @@ def test_mean_probs_running_mean():
     np.testing.assert_allclose(c.mean_probs, [0.5, 0.5])
 
 
+def test_add_batch_matches_per_object_adds():
+    """Vectorized store fold == sequential Cluster.add running means."""
+    r = np.random.default_rng(0)
+    B, D, C = 40, 8, 5
+    cids = r.integers(0, 6, B)
+    feats = r.normal(0, 1, (B, D)).astype(np.float32)
+    probs = r.random((B, C)).astype(np.float32)
+    crops = r.random((B, 4, 4, 3)).astype(np.float32)
+    frames = np.arange(B) // 4
+
+    idx = TopKIndex(K=3, n_local_classes=C)
+    idx.add_batch(cids, feats, probs, np.arange(B), frames, crops=crops)
+
+    # oracle: per-object dataclass adds
+    oracle = {}
+    for i in range(B):
+        cid = int(cids[i])
+        if cid not in oracle:
+            oracle[cid] = Cluster(cid, np.zeros(D, np.float32),
+                                  crops[i].copy(),
+                                  np.zeros(C, np.float32))
+        oracle[cid].add(i, int(frames[i]), feats[i], probs[i],
+                        crop=crops[i])
+    assert idx.n_clusters == len(oracle)
+    assert idx.n_objects == B
+    for cid, cl in oracle.items():
+        got = idx.clusters[cid]
+        assert got.count == cl.count
+        assert got.members == cl.members
+        assert got.frames == cl.frames
+        np.testing.assert_allclose(got.centroid, cl.centroid, atol=1e-5)
+        np.testing.assert_allclose(got.mean_probs, cl.mean_probs, atol=1e-5)
+        np.testing.assert_allclose(got.rep_crop, cl.rep_crop)
+    np.testing.assert_array_equal(
+        idx.first_members(list(oracle)),
+        [oracle[c].members[0] for c in oracle])
+
+
+def test_attach_adds_members_without_moving_centroid():
+    idx = TopKIndex(K=2, n_local_classes=3)
+    p = np.array([0.7, 0.2, 0.1], np.float32)
+    idx.add_cluster(_mk_cluster(0, p, [0, 1], [5, 3]))
+    before = idx.clusters[0].centroid.copy()
+    idx.attach(np.array([0, 0]), np.array([7, 8]), np.array([9, 9]))
+    cl = idx.clusters[0]
+    assert cl.count == 4 and cl.members == [0, 1, 7, 8]
+    np.testing.assert_array_equal(cl.centroid, before)
+    np.testing.assert_array_equal(idx.frames_of([0]), [3, 5, 9])
+
+
+def test_add_cluster_same_cid_replaces():
+    """Dict-era semantics: re-adding a cluster_id replaces the cluster."""
+    p = np.array([0.7, 0.2, 0.1], np.float32)
+    idx = TopKIndex(K=2, n_local_classes=3)
+    idx.add_cluster(_mk_cluster(0, p, [0, 1], [0, 1]))
+    idx.add_cluster(_mk_cluster(0, p, [5], [9]))
+    assert idx.n_clusters == 1 and idx.n_objects == 1
+    assert idx.clusters[0].members == [5]
+    assert idx.lookup(0) == [0]
+    np.testing.assert_array_equal(idx.frames_of([0]), [9])
+
+
+def test_csr_refreshes_after_row_allocation():
+    """Reading members/frames, then adding a cluster with no members, then
+    reading the new cluster must not hit a stale CSR index."""
+    p = np.array([0.7, 0.2, 0.1], np.float32)
+    idx = TopKIndex(K=2, n_local_classes=3)
+    idx.add_cluster(_mk_cluster(0, p, [0, 1], [0, 1]))
+    np.testing.assert_array_equal(idx.frames_of([0]), [0, 1])   # builds CSR
+    idx.add_cluster(Cluster(1, np.zeros(8, np.float32),
+                            np.zeros((4, 4, 3), np.float32), p))  # no members
+    assert idx.clusters[1].members == []
+    np.testing.assert_array_equal(idx.frames_of([1]), [])
+
+
+def test_unknown_cid_raises_keyerror():
+    """Dict-era contract: querying an absent cluster id is an error, not a
+    silent wrong answer."""
+    p = np.array([0.7, 0.2, 0.1], np.float32)
+    idx = TopKIndex(K=2, n_local_classes=3)
+    idx.add_cluster(_mk_cluster(10, p, [0], [0]))
+    with pytest.raises(KeyError):
+        idx.frames_of([15])
+    with pytest.raises(KeyError):
+        idx.first_members([999])
+    with pytest.raises(KeyError):
+        TopKIndex(K=1, n_local_classes=2).frames_of([0])
+
+
+def test_add_batch_crop_storage_deferred_until_supplied():
+    """crops=None rows don't poison the store: a later crop-bearing batch
+    allocates storage with the right shape."""
+    idx = TopKIndex(K=2, n_local_classes=3)
+    z = np.zeros((1, 4), np.float32)
+    zp = np.zeros((1, 3), np.float32)
+    idx.add_batch(np.array([0]), z, zp, np.array([0]), np.array([0]))
+    idx.add_batch(np.array([1]), z, zp, np.array([1]), np.array([1]),
+                  crops=np.ones((1, 2, 2, 3), np.float32))
+    assert idx.store.rep_crops.shape[1:] == (2, 2, 3)
+    np.testing.assert_allclose(idx.rep_crops([1]),
+                               np.ones((1, 2, 2, 3), np.float32))
+
+
+def test_clusters_view_is_read_only():
+    p = np.array([0.7, 0.2, 0.1], np.float32)
+    idx = TopKIndex(K=2, n_local_classes=3)
+    idx.add_cluster(_mk_cluster(0, p, [0], [0]))
+    with pytest.raises(TypeError):
+        idx.clusters[0].add(1, 1, np.zeros(8, np.float32), p)
+
+
+def test_load_legacy_dict_era_format(tmp_path):
+    """Indexes written by the Dict[int, Cluster] implementation load into
+    the SoA store unchanged (same JSON + NPZ layout)."""
+    import json as _json
+    path = str(tmp_path / "legacy")
+    meta = {
+        "K": 2,
+        "n_local_classes": 3,
+        "class_map": [3, 8],
+        "clusters": {
+            "0": {"count": 3, "members": [0, 1, 2], "frames": [0, 0, 1]},
+            "5": {"count": 1, "members": [3], "frames": [2]},
+        },
+    }
+    arrays = {
+        "centroid_0": np.arange(8, dtype=np.float32),
+        "probs_0": np.array([0.6, 0.3, 0.1], np.float32),
+        "crop_0": np.zeros((4, 4, 3), np.float32),
+        "centroid_5": np.ones(8, np.float32),
+        "probs_5": np.array([0.1, 0.3, 0.6], np.float32),
+        "crop_5": np.ones((4, 4, 3), np.float32),
+    }
+    np.savez_compressed(path + ".npz", **arrays)
+    with open(path + ".json", "w") as f:
+        _json.dump(meta, f)
+
+    idx = TopKIndex.load(path)
+    assert idx.K == 2 and idx.n_clusters == 2 and idx.n_objects == 4
+    assert idx.clusters[5].members == [3]
+    assert idx.clusters[0].frames == [0, 0, 1]
+    np.testing.assert_array_equal(idx.frames_of([0, 5]), [0, 1, 2])
+    assert idx.lookup(3) == [0]               # local 0 top-ranked in cl 0
+    # save -> load again: format round-trips through the store
+    idx.save(str(tmp_path / "again"))
+    idx2 = TopKIndex.load(str(tmp_path / "again"))
+    assert idx2.summary() == idx.summary()
+    np.testing.assert_allclose(idx2.clusters[5].centroid,
+                               idx.clusters[5].centroid)
+
+
 def test_save_load_roundtrip(tmp_path):
     cmap = ClassMap(global_ids=np.array([3, 8]))
     idx = TopKIndex(K=2, n_local_classes=3, class_map=cmap)

@@ -39,6 +39,31 @@ def test_centroid_assign_block_shapes(bb, bm):
     np.testing.assert_allclose(np.asarray(d2), np.asarray(d2r), atol=1e-4)
 
 
+@pytest.mark.parametrize("B,M,D,T", [
+    (7, 13, 32, 7.0), (64, 64, 128, 14.0), (130, 257, 64, 10.0),
+])
+def test_centroid_assign_fused_threshold_matches_ref(B, M, D, T):
+    """The kernel-emitted matched mask == host-side d2 <= T**2 compare."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(B * M + D))
+    f = jax.random.normal(k1, (B, D))
+    c = jax.random.normal(k2, (M, D))
+    d2, j, m = ops.centroid_assign(f, c, threshold=T)
+    d2r, jr, mr = ref.centroid_assign_ref(f, c, threshold=T)
+    np.testing.assert_array_equal(np.asarray(j), np.asarray(jr))
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d2r), atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(mr))
+    assert np.asarray(m).dtype == np.bool_
+    # threshold must actually discriminate in this draw
+    assert 0 < np.asarray(m).sum() < B
+
+
+def test_centroid_assign_threshold_none_keeps_two_outputs():
+    f = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
+    c = jax.random.normal(jax.random.PRNGKey(1), (4, 8))
+    out = ops.centroid_assign(f, c)
+    assert len(out) == 2
+
+
 def test_centroid_assign_identical_rows():
     """Distance to an exact-duplicate centroid must be ~0 at the dup index."""
     f = jnp.tile(jnp.arange(32, dtype=jnp.float32)[None], (4, 1))

@@ -51,8 +51,8 @@ _SUBPROC = textwrap.dedent("""
     import repro.launch.steps as st
     from repro.launch.dryrun import collective_stats
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     cfg = dataclasses.replace(reduced(get_arch("olmo-1b")),
                               d_model=128, n_heads=4, n_kv_heads=2)
     cell = dataclasses.replace(LM_SHAPES["train_4k"], seq_len=128,
@@ -66,6 +66,8 @@ _SUBPROC = textwrap.dedent("""
         compiled = lowered.compile()
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # older jax returns [dict]
+        ca = ca[0]
     coll = collective_stats(compiled.as_text())
     print(json.dumps({
         "flops": float(ca.get("flops", 0)),
@@ -109,8 +111,8 @@ def test_collective_stats_parser():
 
 def test_input_specs_are_abstract():
     """StepSpec args must be ShapeDtypeStruct — no device allocation."""
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     import repro.launch.steps as st
     spec = st.build("vit-s16", "serve_b1", mesh)
     for leaf in jax.tree.leaves(spec.args):

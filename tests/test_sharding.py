@@ -11,9 +11,8 @@ from repro.distributed.sharding import act_spec
 @pytest.fixture(scope="module")
 def mesh():
     # single CPU device, axes of size 1: rules still resolve axis names
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_attention_weight_specs(mesh):
@@ -42,9 +41,8 @@ def test_norms_replicated(mesh):
 
 
 def test_indivisible_dims_fall_back_replicated():
-    mesh2 = jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh2 = make_mesh((1, 1), ("data", "model"))
     # odd vocab not divisible by axis of size 1 is still "divisible";
     # simulate indivisibility via a fake axis size by checking rule shape
     s = spec_for_param("layers/attn/wq", (4, 63, 65), mesh2, stacked=True)
