@@ -155,6 +155,24 @@ def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
+def append_trajectory(path: str, record: dict):
+    """Append one record to a BENCH_*.json trajectory file (a JSON list);
+    a corrupt or non-list file is reset rather than crashing the bench."""
+    import json
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            history = []
+        if not isinstance(history, list):
+            history = []
+    history.append(record)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1)
+
+
 # ---------------------------------------------------------------------------
 # Shared Focus evaluation (used by fig1/6/7/8/9/10/12)
 # ---------------------------------------------------------------------------

@@ -9,13 +9,12 @@ future perf PRs are measured against this one.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import append_trajectory, emit
 from repro.core.ingest import IngestConfig, ingest
 
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
@@ -43,21 +42,6 @@ def _synthetic_stream(seed: int = 0):
     crops = r.normal(0, 1, (N_OBJECTS, 8, 8, 3)).astype(np.float32)
     frames = np.repeat(np.arange(N_OBJECTS // 8), 8)[:N_OBJECTS]
     return crops, frames, feats, probs
-
-
-def _append_trajectory(record: dict):
-    history = []
-    if os.path.exists(BENCH_PATH):
-        try:
-            with open(BENCH_PATH) as f:
-                history = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            history = []
-        if not isinstance(history, list):
-            history = []
-    history.append(record)
-    with open(BENCH_PATH, "w") as f:
-        json.dump(history, f, indent=1)
 
 
 def run():
@@ -93,7 +77,7 @@ def run():
         }
         emit(f"ingest.{variant}.{N_OBJECTS}x{FEAT_DIM}", wall * 1e6,
              f"objs_per_s={objs_per_s:.0f}|n_clusters={index.n_clusters}")
-    _append_trajectory(record)
+    append_trajectory(BENCH_PATH, record)
 
 
 if __name__ == "__main__":

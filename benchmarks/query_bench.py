@@ -1,0 +1,122 @@
+"""Query-path throughput: sequential per-class ``query()`` vs the batched
+``QueryEngine`` (union + GT-label cache) on a synthetic video-shaped index.
+
+The headline number is GT-CNN invocations for the dominant-class workload:
+sequential querying re-classifies shared candidate centroids per class and
+re-pays everything on every round, while the engine verifies each centroid
+at most once across all queries and rounds. One record per run is appended
+to the BENCH_query.json trajectory so future query-path PRs are measured
+against this one.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import append_trajectory, emit
+from repro.core.engine import QueryEngine
+from repro.core.index import TopKIndex
+from repro.core.query import query
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_query.json")
+
+N_OBJECTS = 8192
+FEAT_DIM = 64
+N_CLASSES = 24
+N_MODES = 400
+K = 4
+GT_FLOPS = 1.2e11
+WARM_ROUNDS = 5
+
+
+def _synthetic_index(seed: int = 0):
+    """Index over a mode-based stream; crops encode the mode's true class
+    in pixel (0, 0, 0) so the GT-CNN stub is exact and order-free."""
+    r = np.random.default_rng(seed)
+    mode_cls = r.integers(0, N_CLASSES, N_MODES)
+    pick = r.integers(0, N_MODES, N_OBJECTS)
+    feats = r.normal(0, 1, (N_OBJECTS, FEAT_DIM)).astype(np.float32)
+    # soft probs: true class strong, a few confusable classes in the top-K
+    # tail so candidate sets overlap across concurrent queries
+    probs = r.random((N_OBJECTS, N_CLASSES)).astype(np.float32) * 0.3
+    probs[np.arange(N_OBJECTS), mode_cls[pick]] += 1.0
+    probs[np.arange(N_OBJECTS), (mode_cls[pick] + 1) % N_CLASSES] += 0.5
+    probs /= probs.sum(1, keepdims=True)
+    crops = r.random((N_OBJECTS, 8, 8, 3)).astype(np.float32)
+    crops[:, 0, 0, 0] = mode_cls[pick].astype(np.float32)
+    frames = np.repeat(np.arange(N_OBJECTS // 8), 8)[:N_OBJECTS]
+
+    index = TopKIndex(K=K, n_local_classes=N_CLASSES)
+    for start in range(0, N_OBJECTS, 512):
+        sl = slice(start, start + 512)
+        index.add_batch(pick[sl], feats[sl], probs[sl],
+                        np.arange(N_OBJECTS)[sl], frames[sl],
+                        crops=crops[sl])
+    return index
+
+
+def _gt_apply(batch):
+    return np.rint(batch[:, 0, 0, 0]).astype(np.int64)
+
+
+def run():
+    index = _synthetic_index()
+    workload = list(range(N_CLASSES))
+
+    # sequential baseline: per-class query(), re-paying shared centroids
+    t0 = time.perf_counter()
+    seq_results = [query(index, x, _gt_apply, GT_FLOPS) for x in workload]
+    seq_wall = time.perf_counter() - t0
+    seq_gt = sum(r.n_gt_invocations for r in seq_results)
+
+    # engine: one union + one bucketed GT pass, verdict cache across rounds
+    engine = QueryEngine(index, gt_apply=_gt_apply,
+                         gt_flops_per_image=GT_FLOPS)
+    cold_results, cold = engine.query_many(workload)
+    warm_walls, warm_gt = [], 0
+    for _ in range(WARM_ROUNDS):
+        _, warm = engine.query_many(workload)
+        warm_walls.append(warm.wall_s)
+        warm_gt += warm.n_gt_invocations
+
+    frames_identical = all(
+        np.array_equal(s.frames, e.frames)
+        for s, e in zip(seq_results, cold_results))
+    seq_per_round = seq_gt            # what query() pays on EVERY round
+    cold_ratio = seq_gt / max(cold.n_gt_invocations, 1)
+    warm_ratio = seq_per_round / max(warm_gt / WARM_ROUNDS, 1)
+    qps_warm = len(workload) / max(np.mean(warm_walls), 1e-9)
+
+    record = {
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "n_objects": N_OBJECTS, "n_clusters": index.n_clusters,
+        "n_queries": len(workload),
+        "seq_gt_invocations": int(seq_gt),
+        "cold_gt_invocations": int(cold.n_gt_invocations),
+        "warm_gt_invocations_per_round": warm_gt / WARM_ROUNDS,
+        "cold_ratio": round(cold_ratio, 2),
+        "warm_ratio": round(min(warm_ratio, 1e6), 2),
+        "frames_identical": bool(frames_identical),
+        "seq_wall_s": round(seq_wall, 4),
+        "cold_wall_s": round(cold.wall_s, 4),
+        "warm_qps": round(qps_warm, 1),
+    }
+    append_trajectory(BENCH_PATH, record)
+    emit(f"query.seq.{len(workload)}q", seq_wall * 1e6,
+         f"gt_calls={seq_gt}")
+    emit(f"query.engine_cold.{len(workload)}q", cold.wall_s * 1e6,
+         f"gt_calls={cold.n_gt_invocations}|ratio={cold_ratio:.1f}x")
+    emit(f"query.engine_warm.{len(workload)}q",
+         float(np.mean(warm_walls)) * 1e6,
+         f"gt_calls_per_round={warm_gt / WARM_ROUNDS:.1f}"
+         f"|qps={qps_warm:.0f}|identical={frames_identical}")
+    assert frames_identical, "engine frames diverge from sequential query()"
+    assert warm_ratio >= 5.0, (
+        f"warm-cache GT reduction {warm_ratio:.1f}x < 5x acceptance gate")
+
+
+if __name__ == "__main__":
+    run()

@@ -18,6 +18,7 @@ MODULES = [
     "sec67_query_rates",       # §6.7: extreme query rates
     "kernel_bench",            # Pallas kernels + clustering throughput
     "ingest_bench",            # end-to-end ingest driver objects/sec
+    "query_bench",             # batched query engine vs sequential query()
 ]
 
 

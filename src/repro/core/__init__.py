@@ -7,6 +7,11 @@ from repro.core.index import (  # noqa: F401
     TopKIndex,
     OTHER,
 )
+from repro.core.engine import (  # noqa: F401
+    BatchQueryStats,
+    EngineStats,
+    QueryEngine,
+)
 from repro.core.ingest import IngestConfig, IngestStats, ingest  # noqa: F401
 from repro.core.query import (  # noqa: F401
     BaselineCosts,

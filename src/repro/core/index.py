@@ -116,6 +116,7 @@ class ClusterStore:
         self.rep_crops: Optional[np.ndarray] = None     # (cap, *crop_shape)
         self.first_objs = np.zeros((0,), np.int64)      # first member id
         self.row_cids = np.zeros((0,), np.int64)        # row -> cid
+        self.versions = np.zeros((0,), np.int64)        # centroid generation
         self._cid_to_row: Dict[int, int] = {}
         # member/frame log
         self.m_n = 0
@@ -168,6 +169,7 @@ class ClusterStore:
                                    np.float32)
         self.first_objs = _grow(self.first_objs, need, (), np.int64)
         self.row_cids = _grow(self.row_cids, need, (), np.int64)
+        self.versions = _grow(self.versions, need, (), np.int64)
         rows = np.arange(self.n_rows, need, dtype=np.int64)
         self.row_cids[rows] = cids
         for c, r in zip(cids.tolist(), rows.tolist()):
@@ -194,7 +196,8 @@ class ClusterStore:
 
     def add_batch(self, cids: np.ndarray, feats: np.ndarray,
                   probs: np.ndarray, obj_ids: np.ndarray,
-                  frame_ids: np.ndarray, crops: Optional[np.ndarray] = None):
+                  frame_ids: np.ndarray, crops: Optional[np.ndarray] = None,
+                  ) -> np.ndarray:
         """Fold a batch of objects into their clusters — vectorized.
 
         cids (B,) may repeat; unseen cids get fresh rows whose rep_crop is
@@ -202,10 +205,14 @@ class ClusterStore:
         segment-sum per array: for a row with prior count c receiving k new
         values, new_mean = (c·mean + Σx) / (c + k) — exactly k sequential
         running-mean folds.
+
+        Returns the sorted row ids whose centroid/mean_probs changed; their
+        ``versions`` entries are bumped so label caches keyed on
+        (cid, version) invalidate precisely.
         """
         cids = np.asarray(cids, np.int64)
         if len(cids) == 0:
-            return
+            return np.zeros((0,), np.int64)
         obj_ids = np.asarray(obj_ids, np.int64)
         frame_ids = np.asarray(frame_ids, np.int64)
         feats = np.asarray(feats, np.float32)
@@ -253,7 +260,9 @@ class ClusterStore:
             (self.mean_probs[touched] * old_cnt[:, None] + prob_sum)
             / denom).astype(np.float32)
         self.counts[touched] = new_cnt
+        self.versions[touched] += 1
         self._append_log(b_rows, obj_ids, frame_ids)
+        return touched
 
     def attach(self, cids: np.ndarray, obj_ids: np.ndarray,
                frame_ids: np.ndarray):
@@ -378,52 +387,81 @@ class TopKIndex:
         s.mean_probs[row] = cluster.mean_probs
         s.rep_crops[row] = cluster.rep_crop
         s.counts[row] = cluster.count
+        s.versions[row] += 1
         if cluster.members:
             s.first_objs[row] = cluster.members[0]
             s._append_log(np.full(len(cluster.members), row, np.int64),
                           np.asarray(cluster.members, np.int64),
                           np.asarray(cluster.frames, np.int64))
-        self._ranks = None
+        self._refresh_ranks(np.array([row], np.int64))
 
     def add_batch(self, cids, feats, probs, obj_ids, frame_ids, crops=None):
-        self.store.add_batch(cids, feats, probs, obj_ids, frame_ids, crops)
-        self._ranks = None
+        touched = self.store.add_batch(cids, feats, probs, obj_ids,
+                                       frame_ids, crops)
+        self._refresh_ranks(touched)
 
     def attach(self, cids, obj_ids, frame_ids):
         self.store.attach(cids, obj_ids, frame_ids)
 
     # -- query-side ------------------------------------------------------------
 
+    def _rank_rows(self, P: np.ndarray) -> np.ndarray:
+        """Rank matrix (m, C) for probability rows P: rank of class c in the
+        row's top-K mean probs, or K when c is outside the top-K — one
+        argpartition over the rows instead of a per-cluster Python loop."""
+        m, C = P.shape
+        K = min(self.K, C)
+        if K < C:
+            part = np.argpartition(-P, K - 1, axis=1)[:, :K]
+        else:
+            part = np.broadcast_to(np.arange(C), (m, C)).copy()
+        vals = np.take_along_axis(P, part, 1)
+        order = np.argsort(-vals, axis=1, kind="stable")
+        top = np.take_along_axis(part, order, 1)       # (m, K)
+        ranks = np.full((m, C), K, np.int32)
+        np.put_along_axis(ranks, top,
+                          np.broadcast_to(np.arange(K, dtype=np.int32),
+                                          (m, K)), 1)
+        return ranks
+
     def _build(self):
-        """Rank matrix (M, C): rank of class c in cluster m's top-K mean
-        probs, or K when c is outside the top-K — one argpartition over the
-        whole store instead of a per-cluster Python loop."""
         s = self.store
         M = s.n_rows
         if M == 0:
             self._ranks = np.zeros((0, 0), np.int32)
             return
-        P = s.mean_probs[:M]
-        C = P.shape[1]
-        K = min(self.K, C)
-        if K < C:
-            part = np.argpartition(-P, K - 1, axis=1)[:, :K]
-        else:
-            part = np.broadcast_to(np.arange(C), (M, C)).copy()
-        vals = np.take_along_axis(P, part, 1)
-        order = np.argsort(-vals, axis=1, kind="stable")
-        top = np.take_along_axis(part, order, 1)       # (M, K)
-        ranks = np.full((M, C), K, np.int32)
-        np.put_along_axis(ranks, top,
-                          np.broadcast_to(np.arange(K, dtype=np.int32),
-                                          (M, K)), 1)
-        self._ranks = ranks
+        self._ranks = self._rank_rows(s.mean_probs[:M])
+
+    def _refresh_ranks(self, rows: np.ndarray):
+        """Incrementally maintain the rank matrix for the touched rows only,
+        so interleaved ingest/query streaming pays O(touched · C) per batch
+        instead of a full O(M · C) rebuild on the next lookup."""
+        if self._ranks is None:
+            return                       # built lazily on the next lookup
+        s = self.store
+        M = s.n_rows
+        C = s.mean_probs.shape[1] if s.mean_probs is not None else 0
+        if self._ranks.shape != (M, C):
+            if self._ranks.shape[1] != C:
+                self._ranks = None       # class width changed: full rebuild
+                return
+            grown = np.full((M, C), min(self.K, C), np.int32)
+            grown[:self._ranks.shape[0]] = self._ranks
+            self._ranks = grown
+        rows = np.asarray(rows, np.int64)
+        if len(rows):
+            self._ranks[rows] = self._rank_rows(s.mean_probs[rows])
 
     def lookup(self, global_class: int, Kx: Optional[int] = None) -> List[int]:
-        """Cluster ids whose top-Kx (local) classes include the queried class."""
+        """Cluster ids whose top-Kx (local) classes include the queried
+        class. ``Kx=None`` means the ingest-time K; ``Kx=0`` selects no
+        clusters; negative Kx is an error."""
         if self._ranks is None:
             self._build()
-        Kx = Kx or self.K
+        if Kx is None:
+            Kx = self.K
+        elif Kx < 0:
+            raise ValueError(f"Kx must be >= 0, got {Kx}")
         local = (self.class_map.to_local(global_class)
                  if self.class_map is not None else global_class)
         if self._ranks.size == 0 or not 0 <= local < self._ranks.shape[1]:
@@ -474,34 +512,65 @@ class TopKIndex:
         }
 
     def save(self, path: str):
-        """Persist index metadata + arrays (MongoDB stand-in, §5). On-disk
-        format unchanged from the Dict[int, Cluster] era."""
+        """Persist index metadata + arrays (MongoDB stand-in, §5).
+
+        Format v2 is columnar: one npz key per *field* across all clusters
+        (centroids (M, D), mean_probs (M, C), rep_crops, counts, ...) plus
+        the flat member/frame log — O(1) npz entries and no per-row Python
+        loop, instead of the dict-era O(M) per-cid keys. ``load`` reads
+        both layouts.
+        """
         s = self.store
-        meta_clusters = {}
-        arrays = {}
-        for row in range(s.n_rows):
-            cid = int(s.row_cids[row])
-            members, frames = s.members_of(row)
-            meta_clusters[str(cid)] = {
-                "count": int(s.counts[row]),
-                "members": members.tolist(),
-                "frames": frames.tolist(),
-            }
-            arrays[f"centroid_{cid}"] = s.centroids[row]
-            arrays[f"probs_{cid}"] = s.mean_probs[row]
-            arrays[f"crop_{cid}"] = (s.rep_crops[row]
-                                     if s.rep_crops is not None
-                                     else np.zeros((0,), np.float32))
+        M = s.n_rows
+        log_rows = s._m_rows[:s.m_n]
+        arrays = {
+            "row_cids": s.row_cids[:M],
+            "centroids": (s.centroids[:M] if s.centroids is not None
+                          else np.zeros((M, 0), np.float32)),
+            "mean_probs": (s.mean_probs[:M] if s.mean_probs is not None
+                           else np.zeros((M, 0), np.float32)),
+            "rep_crops": (s.rep_crops[:M] if s.rep_crops is not None
+                          else np.zeros((M, 0), np.float32)),
+            "counts": s.counts[:M],
+            "first_objs": s.first_objs[:M],
+            "versions": s.versions[:M],
+            "log_cids": s.row_cids[log_rows],
+            "log_objs": s._m_objs[:s.m_n],
+            "log_frames": s._m_frames[:s.m_n],
+        }
         meta = {
+            "format": 2,
             "K": self.K,
             "n_local_classes": self.n_local_classes,
             "class_map": (self.class_map.global_ids.tolist()
                           if self.class_map else None),
-            "clusters": meta_clusters,
         }
         np.savez_compressed(path + ".npz", **arrays)
         with open(path + ".json", "w") as f:
             json.dump(meta, f)
+
+    def _load_columnar(self, arrays: Mapping):
+        s = self.store
+        cids = np.asarray(arrays["row_cids"], np.int64)
+        if len(cids) == 0:
+            return
+        cents = np.asarray(arrays["centroids"], np.float32)
+        probs = np.asarray(arrays["mean_probs"], np.float32)
+        crops = np.asarray(arrays["rep_crops"], np.float32)
+        crop_shape = crops.shape[1:] if crops.shape[1:] != (0,) else None
+        rows = s._new_rows(cids, cents.shape[1], probs.shape[1], crop_shape)
+        s.centroids[rows] = cents
+        s.mean_probs[rows] = probs
+        if crop_shape is not None:
+            s.rep_crops[rows] = crops
+        s.counts[rows] = np.asarray(arrays["counts"], np.int64)
+        s.first_objs[rows] = np.asarray(arrays["first_objs"], np.int64)
+        s.versions[rows] = np.asarray(arrays["versions"], np.int64)
+        log_cids = np.asarray(arrays["log_cids"], np.int64)
+        if len(log_cids):
+            s._append_log(s.rows_of(log_cids),
+                          np.asarray(arrays["log_objs"], np.int64),
+                          np.asarray(arrays["log_frames"], np.int64))
 
     @classmethod
     def load(cls, path: str) -> "TopKIndex":
@@ -511,10 +580,13 @@ class TopKIndex:
         cmap = (ClassMap(np.array(meta["class_map"]))
                 if meta["class_map"] is not None else None)
         idx = cls(meta["K"], meta["n_local_classes"], cmap)
-        for cid_s, info in meta["clusters"].items():
-            cid = int(cid_s)
-            idx.add_cluster(Cluster(
-                cid, arrays[f"centroid_{cid}"], arrays[f"crop_{cid}"],
-                arrays[f"probs_{cid}"], count=info["count"],
-                members=info["members"], frames=info["frames"]))
+        if meta.get("format", 1) >= 2:
+            idx._load_columnar(arrays)
+        else:                      # dict-era layout: per-cid npz keys
+            for cid_s, info in meta["clusters"].items():
+                cid = int(cid_s)
+                idx.add_cluster(Cluster(
+                    cid, arrays[f"centroid_{cid}"], arrays[f"crop_{cid}"],
+                    arrays[f"probs_{cid}"], count=info["count"],
+                    members=info["members"], frames=info["frames"]))
         return idx

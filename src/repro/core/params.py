@@ -17,6 +17,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.engine import QueryEngine
 from repro.core.query import (dominant_classes, gt_frames_by_class,
                               precision_recall)
 from repro.core.ingest import IngestConfig, ingest
@@ -44,24 +45,26 @@ class ConfigEval:
         return (self.ingest_flops, self.query_flops)
 
 
-def _simulate_queries(index: TopKIndex, gt_labels: np.ndarray,
-                      frames: np.ndarray, classes: Sequence[int],
-                      Kx: int, gt_flops: float):
-    """P/R + query cost for each dominant class, using gt labels as the
-    GT-CNN oracle on centroid objects (rep object's gt label IS what GT-CNN
-    would output, by the paper's definition of ground truth)."""
-    gt_by_class = gt_frames_by_class(gt_labels, frames)
+def _simulate_queries(engine: QueryEngine, gt_by_class: Dict[int, np.ndarray],
+                      classes: Sequence[int], Kx: int, gt_flops: float):
+    """P/R + query cost for each dominant class, served through the batched
+    engine in oracle mode (rep object's gt label IS what GT-CNN would
+    output, by the paper's definition of ground truth). The engine's label
+    cache persists across calls, so sweeping the K grid verifies each
+    cluster once instead of once per K.
+
+    ``query_flops`` stays the *cold* cost model — what one standalone query
+    of this class would pay (candidates × GT FLOPs) — since it is the
+    paper's query-latency proxy, independent of sweep-internal caching.
+    """
+    results, _ = engine.query_many(classes, Kx)
     ps, rs, costs = [], [], []
-    for x in classes:
-        cids = index.lookup(x, Kx)
-        firsts = index.first_members(cids)
-        matched = [cid for cid, fm in zip(cids, firsts)
-                   if gt_labels[fm] == x]
-        result = index.frames_of(matched)
-        p, r = precision_recall(result, gt_by_class.get(x, np.array([])))
+    for x, res in zip(classes, results):
+        p, r = precision_recall(res.frames,
+                                gt_by_class.get(int(x), np.array([])))
         ps.append(p)
         rs.append(r)
-        costs.append(len(cids) * gt_flops)
+        costs.append(res.n_candidate_clusters * gt_flops)
     return float(np.mean(ps)), float(np.mean(rs)), float(np.mean(costs))
 
 
@@ -75,6 +78,7 @@ def sweep(crops: np.ndarray, frames: np.ndarray, gt_labels: np.ndarray,
     """cheap_models: model_id -> (apply_fn, flops_per_image)."""
     evals: List[ConfigEval] = []
     dom = dominant_classes(gt_labels)
+    gt_by_class = gt_frames_by_class(gt_labels, frames)
     Kmax = max(Ks)
     for mid, (apply_fn, flops) in cheap_models.items():
         cmap = (class_maps or {}).get(mid)
@@ -84,8 +88,10 @@ def sweep(crops: np.ndarray, frames: np.ndarray, gt_labels: np.ndarray,
                                batch_size=batch_size)
             index, stats = ingest(crops, frames, apply_fn, flops, cfg,
                                   class_map=cmap)
+            engine = QueryEngine(index, oracle_labels=gt_labels,
+                                 gt_flops_per_image=gt_flops)
             for K in Ks:
-                p, r, qcost = _simulate_queries(index, gt_labels, frames,
+                p, r, qcost = _simulate_queries(engine, gt_by_class,
                                                 dom, K, gt_flops)
                 evals.append(ConfigEval(
                     Candidate(mid, K, T), precision=p, recall=r,

@@ -30,10 +30,22 @@ class QueryResult:
     wall_s: float
 
 
+def pad_to_bucket(crops: np.ndarray, bucket: int = 64) -> np.ndarray:
+    """Zero-pad the leading axis up to the next multiple of ``bucket`` (the
+    same shape-bucketing ``SpecializedModel.make_apply`` uses), so a jitted
+    GT-CNN sees O(batch/bucket) distinct shapes instead of recompiling on
+    every ragged final chunk."""
+    pad = (-len(crops)) % bucket
+    if pad:
+        crops = np.concatenate(
+            [crops, np.zeros((pad,) + crops.shape[1:], crops.dtype)])
+    return crops
+
+
 def query(index: TopKIndex, global_class: int,
           gt_apply: Callable[[np.ndarray], np.ndarray],
           gt_flops_per_image: float, Kx: Optional[int] = None,
-          batch_size: int = 256) -> QueryResult:
+          batch_size: int = 256, batch_pad: int = 64) -> QueryResult:
     """gt_apply(crops (B,R,R,3)) -> predicted *global* class ids (B,)."""
     t0 = time.perf_counter()
     cids = index.lookup(global_class, Kx)
@@ -41,8 +53,9 @@ def query(index: TopKIndex, global_class: int,
     n_gt = 0
     for start in range(0, len(cids), batch_size):
         chunk = np.asarray(cids[start:start + batch_size])
-        labels = np.asarray(gt_apply(index.rep_crops(chunk)))
-        n_gt += len(chunk)
+        padded = pad_to_bucket(index.rep_crops(chunk), batch_pad)
+        labels = np.asarray(gt_apply(padded))[:len(chunk)]
+        n_gt += len(chunk)                 # only real crops are accounted
         matched.extend(chunk[labels == global_class].tolist())
     frames = index.frames_of(matched)
     return QueryResult(
@@ -58,11 +71,21 @@ def query(index: TopKIndex, global_class: int,
 
 def gt_frames_by_class(gt_labels: np.ndarray,
                        frames: np.ndarray) -> Dict[int, np.ndarray]:
-    """For each class, the sorted frame ids where GT-CNN saw that class."""
-    out: Dict[int, set] = {}
-    for lab, f in zip(gt_labels, frames):
-        out.setdefault(int(lab), set()).add(int(f))
-    return {c: np.array(sorted(s), np.int64) for c, s in out.items()}
+    """For each class, the sorted frame ids where GT-CNN saw that class —
+    one lexsort over (label, frame) pairs, no per-object Python loop."""
+    gt_labels = np.asarray(gt_labels, np.int64)
+    frames = np.asarray(frames, np.int64)
+    if len(gt_labels) == 0:
+        return {}
+    order = np.lexsort((frames, gt_labels))
+    labs, fs = gt_labels[order], frames[order]
+    keep = np.ones(len(labs), bool)         # drop duplicate (label, frame)
+    keep[1:] = (labs[1:] != labs[:-1]) | (fs[1:] != fs[:-1])
+    labs, fs = labs[keep], fs[keep]
+    starts = np.nonzero(np.r_[True, labs[1:] != labs[:-1]])[0]
+    bounds = np.r_[starts, len(labs)]
+    return {int(labs[starts[i]]): fs[bounds[i]:bounds[i + 1]]
+            for i in range(len(starts))}
 
 
 def precision_recall(result_frames: np.ndarray,

@@ -15,10 +15,11 @@ import time
 
 import numpy as np
 
+from repro.core.engine import QueryEngine
 from repro.core.ingest import IngestConfig, ingest
 from repro.core.params import select, sweep
 from repro.core.query import (dominant_classes, gpu_seconds,
-                              gt_frames_by_class, precision_recall, query)
+                              gt_frames_by_class, precision_recall)
 from repro.data import get_stream
 
 
@@ -31,6 +32,9 @@ def main():
     ap.add_argument("--fps", type=int, default=10)
     ap.add_argument("--ls", type=int, default=6)
     ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--rounds", type=int, default=3,
+                    help="query-workload rounds (round 1 is cold, the rest "
+                         "exercise the warm GT-label cache)")
     ap.add_argument("--index-out", default=None)
     args = ap.parse_args()
 
@@ -74,21 +78,42 @@ def main():
         index.save(args.index_out)
         print(f"[serve] index persisted to {args.index_out}.(json|npz)")
 
-    # serve queries for every dominant class
-    gt_apply = gt_oracle(labels)
+    # serve the dominant-class workload through the batched engine: one
+    # union + one GT-CNN pass for the whole concurrent batch, centroid
+    # verdicts cached across repeated rounds (steady-state query traffic)
+    engine = QueryEngine(index, gt_apply=gt_oracle(labels),
+                         gt_flops_per_image=GT_FLOPS)
     gtf = gt_frames_by_class(labels, frames)
+    workload = [int(x) for x in dominant_classes(labels)]
     ps, rs = [], []
-    for x in dominant_classes(labels):
-        res = query(index, int(x), gt_apply, GT_FLOPS)
-        p, r = precision_recall(res.frames, gtf.get(int(x), np.array([])))
-        ps.append(p)
-        rs.append(r)
-        print(f"  query class={x:4d}: {len(res.frames):5d} frames, "
-              f"{res.n_gt_invocations:4d} GT-CNN calls "
-              f"({gpu_seconds(res.gt_flops)*1e3:8.1f} GPU-ms vs Query-all "
-              f"{gpu_seconds(len(crops)*GT_FLOPS)*1e3:8.1f} GPU-ms) "
-              f"P={p:.3f} R={r:.3f} wall={res.wall_s*1e3:.0f}ms")
-    print(f"[serve] avg P={np.mean(ps):.3f} R={np.mean(rs):.3f}")
+    last = None
+    for rnd in range(max(args.rounds, 1)):
+        results, batch = engine.query_many(workload)
+        last = batch
+        qps = batch.n_queries / max(batch.wall_s, 1e-9)
+        print(f"[serve] round {rnd}: {batch.n_queries} queries in "
+              f"{batch.wall_s*1e3:.0f}ms ({qps:.1f} QPS) | candidates "
+              f"{batch.n_candidates} -> {batch.n_unique_candidates} unique, "
+              f"{batch.n_cache_hits} cached, {batch.n_gt_invocations} "
+              f"GT-CNN calls ({gpu_seconds(batch.gt_flops)*1e3:.1f} GPU-ms "
+              f"vs Query-all "
+              f"{gpu_seconds(len(crops)*GT_FLOPS)*1e3:.1f} GPU-ms)")
+        if rnd > 0:
+            continue                  # accuracy identical across rounds
+        for x, res in zip(workload, results):
+            p, r = precision_recall(res.frames, gtf.get(x, np.array([])))
+            ps.append(p)
+            rs.append(r)
+            print(f"  query class={x:4d}: {len(res.frames):5d} frames, "
+                  f"{res.n_candidate_clusters:4d} candidates, "
+                  f"{res.n_gt_invocations:4d} fresh GT-CNN calls "
+                  f"P={p:.3f} R={r:.3f} wall={res.wall_s*1e3:.1f}ms")
+    print(f"[serve] avg P={np.mean(ps):.3f} R={np.mean(rs):.3f} | last "
+          f"round {last.wall_s*1e3:.1f}ms "
+          f"({last.n_queries / max(last.wall_s, 1e-9):.1f} QPS, "
+          f"{last.wall_s / max(last.n_queries, 1) * 1e3:.2f}ms/query amortized)"
+          f" | lifetime GT calls {engine.stats.n_gt_invocations} for "
+          f"{engine.stats.n_candidates} served candidates")
     return 0
 
 

@@ -1,0 +1,212 @@
+"""QueryEngine: batched multi-query serving with GT-label caching.
+
+Covers the engine/sequential equivalence property, precise cache
+invalidation under interleaved ingest, incremental rank maintenance, and
+the Kx edge-case regressions (Kx=0, negative Kx).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.engine import QueryEngine
+from repro.core.index import TopKIndex
+from repro.core.query import query
+
+GT_FLOPS = 1e9
+
+
+def _mk_index(seed, n_objects=600, n_classes=8, n_modes=40, feat_dim=16,
+              K=3, batch=128):
+    """Synthetic index; crop pixel (0,0,0) encodes the true class so a
+    trivial exact GT-CNN stub exists."""
+    r = np.random.default_rng(seed)
+    mode_cls = r.integers(0, n_classes, n_modes)
+    pick = r.integers(0, n_modes, n_objects)
+    feats = r.normal(0, 1, (n_objects, feat_dim)).astype(np.float32)
+    probs = r.random((n_objects, n_classes)).astype(np.float32) * 0.4
+    probs[np.arange(n_objects), mode_cls[pick]] += 1.0
+    probs /= probs.sum(1, keepdims=True)
+    crops = r.random((n_objects, 4, 4, 3)).astype(np.float32)
+    crops[:, 0, 0, 0] = mode_cls[pick].astype(np.float32)
+    frames = np.repeat(np.arange((n_objects + 3) // 4), 4)[:n_objects]
+    index = TopKIndex(K=K, n_local_classes=n_classes)
+    for s in range(0, n_objects, batch):
+        sl = slice(s, s + batch)
+        index.add_batch(pick[sl], feats[sl], probs[sl],
+                        np.arange(n_objects)[sl], frames[sl],
+                        crops=crops[sl])
+    return index
+
+
+def _gt_apply(batch):
+    return np.rint(batch[:, 0, 0, 0]).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# equivalence property: query_many == sequential query() per class
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([None, 1, 2, 3]))
+def test_query_many_matches_sequential_query(seed, Kx):
+    index = _mk_index(seed)
+    classes = list(range(8))
+    seq = [query(index, x, _gt_apply, GT_FLOPS, Kx=Kx) for x in classes]
+    engine = QueryEngine(index, gt_apply=_gt_apply,
+                         gt_flops_per_image=GT_FLOPS)
+    results, batch = engine.query_many(classes, Kx)
+    for s, e in zip(seq, results):
+        assert s.queried_class == e.queried_class
+        assert s.matched_clusters == e.matched_clusters
+        assert s.n_candidate_clusters == e.n_candidate_clusters
+        np.testing.assert_array_equal(s.frames, e.frames)
+    # union dedup: the engine never classifies more than the unique
+    # candidates, and never more than the sequential total
+    assert batch.n_gt_invocations == batch.n_unique_candidates
+    assert batch.n_gt_invocations <= sum(s.n_gt_invocations for s in seq)
+    # per-query attribution sums to the batch total
+    assert sum(e.n_gt_invocations for e in results) == batch.n_gt_invocations
+
+
+def test_warm_cache_runs_zero_gt_invocations():
+    index = _mk_index(1)
+    engine = QueryEngine(index, gt_apply=_gt_apply,
+                         gt_flops_per_image=GT_FLOPS)
+    _, cold = engine.query_many(list(range(8)))
+    assert cold.n_gt_invocations > 0
+    warm_results, warm = engine.query_many(list(range(8)))
+    assert warm.n_gt_invocations == 0
+    assert warm.n_cache_hits == warm.n_unique_candidates
+    # lower Kx reuses the same cache (candidate sets shrink, §5)
+    _, warm_kx = engine.query_many(list(range(8)), Kx=1)
+    assert warm_kx.n_gt_invocations == 0
+    # lifetime stats accumulated across the three calls
+    assert engine.stats.n_queries == 24
+    assert engine.stats.n_gt_invocations == cold.n_gt_invocations
+
+
+def test_cache_invalidation_on_centroid_move():
+    """Ingest after query: exactly the moved clusters are re-verified."""
+    index = _mk_index(2)
+    engine = QueryEngine(index, gt_apply=_gt_apply,
+                         gt_flops_per_image=GT_FLOPS)
+    engine.query_many(list(range(8)))                     # fill the cache
+    _, warm = engine.query_many(list(range(8)))
+    assert warm.n_gt_invocations == 0
+
+    # fold one object into an existing cluster -> its version bumps
+    s = index.store
+    cid = int(s.row_cids[0])
+    row = s.row_of(cid)
+    ver_before = int(s.versions[row])
+    crop = s.rep_crops[row][None].copy()
+    index.add_batch(np.array([cid]), s.centroids[row][None].copy(),
+                    s.mean_probs[row][None].copy(),
+                    np.array([10_000]), np.array([10_000]), crops=crop)
+    assert int(s.versions[row]) == ver_before + 1
+    assert engine.cached_label(cid) is None               # stale now
+
+    _, after = engine.query_many(list(range(8)))
+    assert after.n_gt_invocations == 1                    # only the moved one
+    assert after.n_cache_hits == after.n_unique_candidates - 1
+
+
+def test_attach_does_not_invalidate_cache():
+    """attach adds members without moving centroids -> verdicts stay."""
+    index = _mk_index(3)
+    engine = QueryEngine(index, gt_apply=_gt_apply,
+                         gt_flops_per_image=GT_FLOPS)
+    engine.query_many(list(range(8)))
+    cid = int(index.store.row_cids[0])
+    index.attach(np.array([cid]), np.array([20_000]), np.array([20_000]))
+    _, warm = engine.query_many(list(range(8)))
+    assert warm.n_gt_invocations == 0
+
+
+def test_oracle_mode_matches_first_member_labels():
+    index = _mk_index(4)
+    gt_labels = np.zeros(600, np.int64)
+    r = np.random.default_rng(4)
+    gt_labels[:] = r.integers(0, 8, 600)
+    engine = QueryEngine(index, oracle_labels=gt_labels,
+                         gt_flops_per_image=GT_FLOPS)
+    results, _ = engine.query_many(list(range(8)))
+    for cls, res in zip(range(8), results):
+        cids = index.lookup(cls)
+        firsts = index.first_members(cids)
+        expect = [int(c) for c, f in zip(cids, firsts)
+                  if gt_labels[f] == cls]
+        assert res.matched_clusters == expect
+
+
+def test_engine_requires_exactly_one_labeler():
+    index = _mk_index(5)
+    with pytest.raises(ValueError):
+        QueryEngine(index)
+    with pytest.raises(ValueError):
+        QueryEngine(index, gt_apply=_gt_apply,
+                    oracle_labels=np.zeros(600, np.int64))
+
+
+def test_single_query_convenience_uses_cache():
+    index = _mk_index(6)
+    engine = QueryEngine(index, gt_apply=_gt_apply,
+                         gt_flops_per_image=GT_FLOPS)
+    res1 = engine.query(0)
+    res2 = engine.query(0)
+    assert res2.n_gt_invocations == 0
+    np.testing.assert_array_equal(res1.frames, res2.frames)
+
+
+# ---------------------------------------------------------------------------
+# Kx edge cases (regression: Kx=0 used to mean "use default K")
+# ---------------------------------------------------------------------------
+
+def test_lookup_kx_zero_returns_no_clusters():
+    index = _mk_index(7)
+    assert index.lookup(0, Kx=0) == []
+    res = query(index, 0, _gt_apply, GT_FLOPS, Kx=0)
+    assert res.n_candidate_clusters == 0 and len(res.frames) == 0
+    engine = QueryEngine(index, gt_apply=_gt_apply)
+    results, batch = engine.query_many([0, 1], Kx=0)
+    assert batch.n_unique_candidates == 0
+    assert all(len(r.frames) == 0 for r in results)
+
+
+def test_lookup_negative_kx_raises():
+    index = _mk_index(8)
+    with pytest.raises(ValueError):
+        index.lookup(0, Kx=-1)
+    with pytest.raises(ValueError):
+        query(index, 0, _gt_apply, GT_FLOPS, Kx=-3)
+
+
+# ---------------------------------------------------------------------------
+# incremental rank maintenance
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_incremental_ranks_match_full_rebuild(seed):
+    """Interleaved ingest/lookup: the incrementally maintained rank matrix
+    equals a from-scratch _build after every batch."""
+    r = np.random.default_rng(seed)
+    n_classes, feat_dim = 6, 8
+    index = TopKIndex(K=2, n_local_classes=n_classes)
+    next_obj = 0
+    for step in range(6):
+        b = int(r.integers(1, 30))
+        cids = r.integers(0, 15, b)
+        feats = r.normal(0, 1, (b, feat_dim)).astype(np.float32)
+        probs = r.random((b, n_classes)).astype(np.float32)
+        probs /= probs.sum(1, keepdims=True)
+        index.add_batch(cids, feats, probs,
+                        np.arange(next_obj, next_obj + b),
+                        np.arange(next_obj, next_obj + b))
+        next_obj += b
+        index.lookup(int(r.integers(0, n_classes)))   # force materialization
+        incremental = index._ranks.copy()
+        index._ranks = None
+        index._build()
+        np.testing.assert_array_equal(incremental, index._ranks)

@@ -221,6 +221,52 @@ def test_load_legacy_dict_era_format(tmp_path):
                                idx.clusters[5].centroid)
 
 
+def test_save_writes_columnar_npz(tmp_path):
+    """Format v2: one npz key per field, not O(M) per-cid keys."""
+    idx = TopKIndex(K=2, n_local_classes=3)
+    p = np.array([0.6, 0.3, 0.1], np.float32)
+    for cid in range(20):
+        idx.add_cluster(_mk_cluster(cid, p, [cid], [cid]))
+    path = str(tmp_path / "col")
+    idx.save(path)
+    keys = set(np.load(path + ".npz").keys())
+    assert keys == {"row_cids", "centroids", "mean_probs", "rep_crops",
+                    "counts", "first_objs", "versions", "log_cids",
+                    "log_objs", "log_frames"}
+    import json as _json
+    with open(path + ".json") as f:
+        meta = _json.load(f)
+    assert meta["format"] == 2 and "clusters" not in meta
+    idx2 = TopKIndex.load(path)
+    assert idx2.summary() == idx.summary()
+    assert idx2.clusters[7].members == [7]
+
+
+def test_columnar_roundtrip_preserves_versions(tmp_path):
+    """Centroid generation counters survive persistence, so a GT-label
+    cache keyed on (cid, version) stays coherent across save/load."""
+    idx = TopKIndex(K=2, n_local_classes=3)
+    z = np.zeros((1, 4), np.float32)
+    pr = np.array([[0.6, 0.3, 0.1]], np.float32)
+    crop = np.zeros((1, 2, 2, 3), np.float32)
+    for _ in range(3):      # three folds -> version 3
+        idx.add_batch(np.array([0]), z, pr, np.array([0]), np.array([0]),
+                      crops=crop)
+    path = str(tmp_path / "ver")
+    idx.save(path)
+    idx2 = TopKIndex.load(path)
+    row = idx2.store.row_of(0)
+    assert int(idx2.store.versions[row]) == 3
+
+
+def test_save_load_empty_index(tmp_path):
+    idx = TopKIndex(K=2, n_local_classes=3)
+    path = str(tmp_path / "empty")
+    idx.save(path)
+    idx2 = TopKIndex.load(path)
+    assert idx2.n_clusters == 0 and idx2.lookup(0) == []
+
+
 def test_save_load_roundtrip(tmp_path):
     cmap = ClassMap(global_ids=np.array([3, 8]))
     idx = TopKIndex(K=2, n_local_classes=3, class_map=cmap)

@@ -1,0 +1,70 @@
+"""Query-path unit coverage: GT-chunk shape bucketing and the vectorized
+``gt_frames_by_class``."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.index import TopKIndex
+from repro.core.query import gt_frames_by_class, pad_to_bucket, query
+
+
+def _legacy_gt_frames_by_class(gt_labels, frames):
+    """The dict-era per-object loop, kept as the property-test oracle."""
+    out = {}
+    for lab, f in zip(gt_labels, frames):
+        out.setdefault(int(lab), set()).add(int(f))
+    return {c: np.array(sorted(s), np.int64) for c, s in out.items()}
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(0, 200))
+def test_gt_frames_by_class_matches_legacy_loop(seed, n):
+    r = np.random.default_rng(seed)
+    labels = r.integers(0, 7, n)
+    frames = r.integers(0, 40, n)
+    got = gt_frames_by_class(labels, frames)
+    want = _legacy_gt_frames_by_class(labels, frames)
+    assert set(got) == set(want)
+    for c in want:
+        np.testing.assert_array_equal(got[c], want[c])
+        assert got[c].dtype == np.int64
+
+
+def test_gt_frames_by_class_empty():
+    assert gt_frames_by_class(np.array([]), np.array([])) == {}
+
+
+def test_pad_to_bucket_shapes():
+    crops = np.ones((5, 4, 4, 3), np.float32)
+    padded = pad_to_bucket(crops, 64)
+    assert padded.shape == (64, 4, 4, 3)
+    np.testing.assert_array_equal(padded[:5], crops)
+    np.testing.assert_array_equal(padded[5:], 0)
+    assert pad_to_bucket(np.ones((64, 2)), 64).shape == (64, 2)
+    assert pad_to_bucket(np.ones((65, 2)), 64).shape == (128, 2)
+
+
+def test_query_pads_ragged_chunk_but_counts_real_crops():
+    """The jitted GT-CNN must only ever see bucket-multiple batch shapes,
+    while n_gt_invocations keeps counting real crops only."""
+    r = np.random.default_rng(0)
+    n_classes, n = 5, 37               # 37 candidates: ragged vs any bucket
+    index = TopKIndex(K=n_classes, n_local_classes=n_classes)
+    probs = np.full((n, n_classes), 1.0 / n_classes, np.float32)
+    crops = r.random((n, 4, 4, 3)).astype(np.float32)
+    crops[:, 0, 0, 0] = 2.0
+    index.add_batch(np.arange(n), r.normal(0, 1, (n, 8)).astype(np.float32),
+                    probs, np.arange(n), np.arange(n), crops=crops)
+
+    seen_shapes = []
+
+    def gt_apply(batch):
+        seen_shapes.append(len(batch))
+        return np.rint(batch[:, 0, 0, 0]).astype(np.int64)
+
+    res = query(index, 2, gt_apply, 1e9, batch_size=16, batch_pad=8)
+    assert res.n_candidate_clusters == n
+    assert res.n_gt_invocations == n             # real crops only
+    assert res.gt_flops == n * 1e9
+    assert all(s % 8 == 0 for s in seen_shapes)  # bucketed device batches
+    assert len(res.matched_clusters) == n        # zero-pad rows sliced off
