@@ -13,6 +13,11 @@ from repro.core.engine import (  # noqa: F401
     QueryEngine,
 )
 from repro.core.ingest import IngestConfig, IngestStats, ingest  # noqa: F401
+from repro.core.streaming import (  # noqa: F401
+    IngestDelta,
+    MultiStreamRunner,
+    StreamingIngestor,
+)
 from repro.core.query import (  # noqa: F401
     BaselineCosts,
     QueryResult,

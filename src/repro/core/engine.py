@@ -142,6 +142,18 @@ class QueryEngine:
                 self._cache[int(cids[i])] = (int(versions[i]), int(lab))
         return labels, n_hits, [int(cids[i]) for i in miss]
 
+    def prefetch(self, cids) -> int:
+        """Warm the GT-label cache for ``cids`` — typically a streaming
+        flush's ``IngestDelta.touched_cids`` — ahead of the next query
+        round, moving GT-CNN cost for new/moved centroids off the query
+        path (query-while-ingest freshness). Returns the number of fresh
+        classifications; already-valid entries cost nothing."""
+        cids = np.unique(np.asarray(list(cids), np.int64))
+        _, _, miss = self.verify(cids)
+        self.stats.n_gt_invocations += len(miss)
+        self.stats.gt_flops += len(miss) * self.gt_flops_per_image
+        return len(miss)
+
     # -- queries ---------------------------------------------------------------
 
     def query_many(self, classes: Sequence[int],

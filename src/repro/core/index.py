@@ -112,18 +112,34 @@ class ClusterStore:
         self.n_rows = 0
         self.centroids: Optional[np.ndarray] = None     # (cap, D) f32
         self.mean_probs: Optional[np.ndarray] = None    # (cap, C) f32
-        self.counts = np.zeros((0,), np.int64)          # (cap,)
+        self.counts = np.zeros((0,), np.int64)          # (cap,) all members
+        # CNN-folded members only: the running-mean weight. Attached
+        # pixel-diff duplicates (never CNN'd) count toward ``counts`` but
+        # must not change how later folds are weighted — otherwise the
+        # centroid would depend on *when* the streaming driver attached
+        # them, breaking chunked/one-shot equivalence.
+        self.fold_counts = np.zeros((0,), np.int64)     # (cap,)
         self.rep_crops: Optional[np.ndarray] = None     # (cap, *crop_shape)
         self.first_objs = np.zeros((0,), np.int64)      # first member id
         self.row_cids = np.zeros((0,), np.int64)        # row -> cid
         self.versions = np.zeros((0,), np.int64)        # centroid generation
         self._cid_to_row: Dict[int, int] = {}
-        # member/frame log
+        # member/frame log for CNN-folded objects (append order is canonical:
+        # it follows the batch partition, which is chunking-invariant)
         self.m_n = 0
         self._m_rows = np.zeros((0,), np.int64)
         self._m_objs = np.zeros((0,), np.int64)
         self._m_frames = np.zeros((0,), np.int64)
-        self._csr = None                                # (order, indptr)
+        # separate log for attached pixel-diff duplicates: their *timing*
+        # depends on when the streaming driver flushed, so they are kept
+        # apart and canonicalized by (obj, frame) order whenever read or
+        # saved — a chunked ingest and a one-shot ingest produce the same
+        # bytes regardless of when duplicates were attached
+        self.a_n = 0
+        self._a_rows = np.zeros((0,), np.int64)
+        self._a_objs = np.zeros((0,), np.int64)
+        self._a_frames = np.zeros((0,), np.int64)
+        self._csr = None                       # (order, indptr, objs, frames)
         self._sorter = None                             # argsort of row_cids
 
     # -- rows ------------------------------------------------------------------
@@ -162,6 +178,7 @@ class ClusterStore:
         self.mean_probs = _grow(self.mean_probs, need, (n_classes,),
                                 np.float32)
         self.counts = _grow(self.counts, need, (), np.int64)
+        self.fold_counts = _grow(self.fold_counts, need, (), np.int64)
         if crop_shape is not None or self.rep_crops is not None:
             if crop_shape is None:
                 crop_shape = self.rep_crops.shape[1:]
@@ -191,6 +208,30 @@ class ClusterStore:
         self._m_frames[self.m_n:need] = frame_ids
         self.m_n = need
         self._csr = None
+
+    def _append_attach_log(self, rows: np.ndarray, obj_ids: np.ndarray,
+                           frame_ids: np.ndarray):
+        k = len(rows)
+        need = self.a_n + k
+        self._a_rows = _grow(self._a_rows, need, (), np.int64)
+        self._a_objs = _grow(self._a_objs, need, (), np.int64)
+        self._a_frames = _grow(self._a_frames, need, (), np.int64)
+        self._a_rows[self.a_n:need] = rows
+        self._a_objs[self.a_n:need] = obj_ids
+        self._a_frames[self.a_n:need] = frame_ids
+        self.a_n = need
+        self._csr = None
+
+    def _attach_canonical(self):
+        """Attach-log entries in canonical (obj, frame) order — independent
+        of when the streaming driver attached them."""
+        rows = self._a_rows[:self.a_n]
+        objs = self._a_objs[:self.a_n]
+        frames = self._a_frames[:self.a_n]
+        if self.a_n == 0:
+            return rows, objs, frames
+        order = np.lexsort((frames, objs))
+        return rows[order], objs[order], frames[order]
 
     # -- batched ingest --------------------------------------------------------
 
@@ -250,7 +291,7 @@ class ClusterStore:
         prob_sum = np.zeros((k, probs.shape[1]), np.float64)
         np.add.at(prob_sum, inv, probs.astype(np.float64))
 
-        old_cnt = self.counts[touched]
+        old_cnt = self.fold_counts[touched]
         new_cnt = old_cnt + add_cnt
         denom = new_cnt.astype(np.float64)[:, None]
         self.centroids[touched] = (
@@ -259,7 +300,8 @@ class ClusterStore:
         self.mean_probs[touched] = (
             (self.mean_probs[touched] * old_cnt[:, None] + prob_sum)
             / denom).astype(np.float32)
-        self.counts[touched] = new_cnt
+        self.fold_counts[touched] = new_cnt
+        self.counts[touched] += add_cnt
         self.versions[touched] += 1
         self._append_log(b_rows, obj_ids, frame_ids)
         return touched
@@ -274,19 +316,25 @@ class ClusterStore:
         rows = self.rows_of(cids)
         uniq, cnt = np.unique(rows, return_counts=True)
         self.counts[uniq] += cnt
-        self._append_log(rows, np.asarray(obj_ids, np.int64),
-                         np.asarray(frame_ids, np.int64))
+        self._append_attach_log(rows, np.asarray(obj_ids, np.int64),
+                                np.asarray(frame_ids, np.int64))
 
     # -- reads -----------------------------------------------------------------
 
     def _build_csr(self):
+        """CSR over the combined log: fold entries (append order) followed
+        by attach entries in canonical order, so per-row member lists are
+        identical however the stream was chunked."""
         if self._csr is None:
-            rows = self._m_rows[:self.m_n]
+            a_rows, a_objs, a_frames = self._attach_canonical()
+            rows = np.concatenate([self._m_rows[:self.m_n], a_rows])
+            objs = np.concatenate([self._m_objs[:self.m_n], a_objs])
+            frames = np.concatenate([self._m_frames[:self.m_n], a_frames])
             order = np.argsort(rows, kind="stable")
             counts = np.bincount(rows, minlength=self.n_rows)
             indptr = np.zeros(self.n_rows + 1, np.int64)
             np.cumsum(counts, out=indptr[1:])
-            self._csr = (order, indptr)
+            self._csr = (order, indptr, objs, frames)
         return self._csr
 
     def drop_log_of(self, row: int):
@@ -298,21 +346,27 @@ class ClusterStore:
         self._m_objs[:kept] = self._m_objs[:self.m_n][keep]
         self._m_frames[:kept] = self._m_frames[:self.m_n][keep]
         self.m_n = kept
+        a_keep = self._a_rows[:self.a_n] != row
+        a_kept = int(a_keep.sum())
+        self._a_rows[:a_kept] = self._a_rows[:self.a_n][a_keep]
+        self._a_objs[:a_kept] = self._a_objs[:self.a_n][a_keep]
+        self._a_frames[:a_kept] = self._a_frames[:self.a_n][a_keep]
+        self.a_n = a_kept
         self._csr = None
 
     def members_of(self, row: int):
-        order, indptr = self._build_csr()
+        order, indptr, objs, frames = self._build_csr()
         sel = order[indptr[row]:indptr[row + 1]]
-        return self._m_objs[sel], self._m_frames[sel]
+        return objs[sel], frames[sel]
 
     def frames_of_rows(self, rows: np.ndarray) -> np.ndarray:
         """Union of frame ids over the given rows — O(selected members) via
         the cached CSR, not a scan of the whole log."""
-        order, indptr = self._build_csr()
+        order, indptr, _, frames = self._build_csr()
         if len(rows) == 0:
             return np.array([], np.int64)
         sel = np.concatenate([order[indptr[r]:indptr[r + 1]] for r in rows])
-        return np.unique(self._m_frames[sel]).astype(np.int64)
+        return np.unique(frames[sel]).astype(np.int64)
 
 
 class _ViewCluster(Cluster):
@@ -387,6 +441,7 @@ class TopKIndex:
         s.mean_probs[row] = cluster.mean_probs
         s.rep_crops[row] = cluster.rep_crop
         s.counts[row] = cluster.count
+        s.fold_counts[row] = cluster.count
         s.versions[row] += 1
         if cluster.members:
             s.first_objs[row] = cluster.members[0]
@@ -399,6 +454,7 @@ class TopKIndex:
         touched = self.store.add_batch(cids, feats, probs, obj_ids,
                                        frame_ids, crops)
         self._refresh_ranks(touched)
+        return touched
 
     def attach(self, cids, obj_ids, frame_ids):
         self.store.attach(cids, obj_ids, frame_ids)
@@ -514,15 +570,18 @@ class TopKIndex:
     def save(self, path: str):
         """Persist index metadata + arrays (MongoDB stand-in, §5).
 
-        Format v2 is columnar: one npz key per *field* across all clusters
+        Format v3 is columnar: one npz key per *field* across all clusters
         (centroids (M, D), mean_probs (M, C), rep_crops, counts, ...) plus
-        the flat member/frame log — O(1) npz entries and no per-row Python
-        loop, instead of the dict-era O(M) per-cid keys. ``load`` reads
-        both layouts.
+        the flat fold log and the attach log (the latter written in
+        canonical (obj, frame) order, so a streaming ingest saves
+        byte-identically to a one-shot ingest of the same stream no matter
+        when duplicates were attached). ``load`` reads all three layouts
+        (v1 dict-era, v2 single-log, v3).
         """
         s = self.store
         M = s.n_rows
         log_rows = s._m_rows[:s.m_n]
+        att_rows, att_objs, att_frames = s._attach_canonical()
         arrays = {
             "row_cids": s.row_cids[:M],
             "centroids": (s.centroids[:M] if s.centroids is not None
@@ -537,9 +596,12 @@ class TopKIndex:
             "log_cids": s.row_cids[log_rows],
             "log_objs": s._m_objs[:s.m_n],
             "log_frames": s._m_frames[:s.m_n],
+            "att_cids": s.row_cids[att_rows],
+            "att_objs": att_objs,
+            "att_frames": att_frames,
         }
         meta = {
-            "format": 2,
+            "format": 3,
             "K": self.K,
             "n_local_classes": self.n_local_classes,
             "class_map": (self.class_map.global_ids.tolist()
@@ -564,6 +626,7 @@ class TopKIndex:
         if crop_shape is not None:
             s.rep_crops[rows] = crops
         s.counts[rows] = np.asarray(arrays["counts"], np.int64)
+        s.fold_counts[rows] = s.counts[rows]     # attach share removed below
         s.first_objs[rows] = np.asarray(arrays["first_objs"], np.int64)
         s.versions[rows] = np.asarray(arrays["versions"], np.int64)
         log_cids = np.asarray(arrays["log_cids"], np.int64)
@@ -571,6 +634,16 @@ class TopKIndex:
             s._append_log(s.rows_of(log_cids),
                           np.asarray(arrays["log_objs"], np.int64),
                           np.asarray(arrays["log_frames"], np.int64))
+        if "att_cids" in arrays:        # v3: separate attach log
+            att_cids = np.asarray(arrays["att_cids"], np.int64)
+            if len(att_cids):
+                att_rows = s.rows_of(att_cids)
+                s._append_attach_log(
+                    att_rows,
+                    np.asarray(arrays["att_objs"], np.int64),
+                    np.asarray(arrays["att_frames"], np.int64))
+                s.fold_counts[:s.n_rows] -= np.bincount(
+                    att_rows, minlength=s.n_rows).astype(np.int64)
 
     @classmethod
     def load(cls, path: str) -> "TopKIndex":

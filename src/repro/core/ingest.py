@@ -9,18 +9,19 @@ and fully batched through the SoA ``ClusterStore`` — there is no per-object
 Python loop anywhere on the hot path, mirroring the paper's CPU/GPU
 pipelining (§6.3: clustering runs on CPUs of the ingest machine, fully
 pipelined with the GPUs running the CNN).
+
+The chunk-step itself (CNN batch -> clustering -> slot/cid bookkeeping ->
+index fold -> eviction) lives in ``core.streaming.StreamingIngestor``;
+``ingest()`` is the one-shot wrapper feeding a single chunk.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from typing import Callable, Optional, Tuple
 
 import numpy as np
 
-from repro.core import clustering as C
 from repro.core.index import ClassMap, TopKIndex
-from repro.data.bgsub import pixel_difference
 
 
 @dataclass(frozen=True)
@@ -51,29 +52,25 @@ def pixel_tracks(crops: np.ndarray, frames: np.ndarray,
     """Root object id per object under §4.2 pixel differencing.
 
     Objects in frame t whose pixels nearly match an object in frame t-1
-    join that object's track (and will share its cluster) without a CNN pass.
+    join that object's track (and will share its cluster) without a CNN
+    pass. Thin one-shot view over the streaming ``_PixelTracker`` — the
+    same code path ingest uses — so its tests pin the live tracker.
     """
+    from repro.core.streaming import _PixelTracker
     n = len(crops)
     roots = np.arange(n)
     if n == 0:
         return roots
     order = np.argsort(frames, kind="stable")
-    prev_ids: np.ndarray = np.array([], dtype=np.int64)
-    prev_frame = -1
+    tracker = _PixelTracker(threshold)
     i = 0
-    while i < len(order):
-        f = frames[order[i]]
+    while i < n:
+        f = int(frames[order[i]])
         j = i
-        while j < len(order) and frames[order[j]] == f:
+        while j < n and frames[order[j]] == f:
             j += 1
-        cur_ids = order[i:j]
-        if prev_frame == f - 1 and len(prev_ids):
-            match = pixel_difference(crops[cur_ids], crops[prev_ids],
-                                     threshold)
-            for local, m in enumerate(match):
-                if m >= 0:
-                    roots[cur_ids[local]] = roots[prev_ids[m]]
-        prev_ids, prev_frame = cur_ids, f
+        ids = order[i:j]
+        roots[ids] = tracker.resolve(f, crops[ids], ids.astype(np.int64))
         i = j
     return roots
 
@@ -84,82 +81,20 @@ def ingest(crops: np.ndarray, frames: np.ndarray,
            class_map: Optional[ClassMap] = None,
            n_local_classes: Optional[int] = None,
            ) -> Tuple[TopKIndex, IngestStats]:
-    """Build the top-K index for a stream of detected objects.
+    """Build the top-K index for a stream of detected objects — the
+    one-shot (single-chunk) wrapper over ``streaming.StreamingIngestor``.
 
     cheap_apply(crops (B,R,R,3)) -> (probs (B, C_local), feats (B, D)).
     Feature/class dims are derived from the first real batch — no extra
     shape-probe CNN invocation, and every CNN pass is counted in the stats.
+    Objects are processed in (stable) frame order; for time-ordered
+    streams — every stream here — that is exactly the array order the
+    pre-streaming implementation used, and a chunked ``StreamingIngestor``
+    run over the same stream saves a byte-identical index.
     """
-    t0 = time.perf_counter()
-    stats = IngestStats(n_objects=len(crops))
-
-    roots = (pixel_tracks(crops, frames, cfg.pixel_diff_threshold)
-             if cfg.pixel_diff else np.arange(len(crops)))
-    unique_ids = np.nonzero(roots == np.arange(len(crops)))[0]
-    stats.n_pixel_dedup = len(crops) - len(unique_ids)
-
-    index: Optional[TopKIndex] = None
-    state = None                               # lazy: dims from first batch
-    slot_cid = np.full(cfg.max_clusters, -1, np.int64)   # slot -> cid
-    obj_cid = np.full(len(crops), -1, np.int64)          # object -> cid
-    next_cid = 0
-    try:
-        cluster_fn = C.CLUSTER_FNS[cfg.clustering]
-    except KeyError:
-        raise ValueError(
-            f"unknown clustering variant {cfg.clustering!r}; "
-            f"expected one of {sorted(C.CLUSTER_FNS)}") from None
-
-    for start in range(0, len(unique_ids), cfg.batch_size):
-        batch_ids = unique_ids[start:start + cfg.batch_size]
-        batch_crops = crops[batch_ids]
-        probs, feats = cheap_apply(batch_crops)
-        probs = np.asarray(probs)
-        feats = np.asarray(feats, np.float32)
-        stats.n_cnn_invocations += len(batch_ids)
-        stats.cheap_flops += len(batch_ids) * cheap_flops_per_image
-
-        if index is None:
-            if n_local_classes is None:
-                n_local_classes = probs.shape[1]
-            index = TopKIndex(cfg.K, n_local_classes, class_map)
-            state = C.init_state(cfg.max_clusters, feats.shape[1])
-
-        state, slots = cluster_fn(state, feats, cfg.threshold)
-        slots = np.asarray(slots)
-
-        # slot -> cid, assigning fresh cids in first-appearance order
-        unmapped = slot_cid[slots] < 0
-        if unmapped.any():
-            new_slots, first_pos = np.unique(slots[unmapped],
-                                             return_index=True)
-            order = np.argsort(first_pos, kind="stable")
-            slot_cid[new_slots[order]] = next_cid + np.arange(len(new_slots))
-            next_cid += len(new_slots)
-        cids = slot_cid[slots]
-        obj_cid[batch_ids] = cids
-
-        index.add_batch(cids, feats, probs, batch_ids, frames[batch_ids],
-                        crops=batch_crops)
-
-        # eviction keeps the live table at M (paper: evict smallest)
-        if int(state.n) >= int(cfg.high_water * cfg.max_clusters):
-            state, evicted, remap = C.evict_smallest(state, cfg.evict_frac)
-            stats.n_evictions += len(evicted)
-            new_slot_cid = np.full_like(slot_cid, -1)
-            live = remap >= 0
-            new_slot_cid[remap[live]] = slot_cid[live]
-            slot_cid = new_slot_cid
-
-    if index is None:        # empty stream
-        index = TopKIndex(cfg.K, n_local_classes or 0, class_map)
-
-    # attach pixel-diff duplicates to their root's cluster (batched)
-    dup = np.nonzero(roots != np.arange(len(crops)))[0]
-    if len(dup):
-        root_cids = obj_cid[roots[dup]]
-        valid = root_cids >= 0
-        index.attach(root_cids[valid], dup[valid], frames[dup[valid]])
-
-    stats.wall_s = time.perf_counter() - t0
-    return index, stats
+    from repro.core.streaming import StreamingIngestor
+    ing = StreamingIngestor(cheap_apply, cheap_flops_per_image, cfg,
+                            class_map=class_map,
+                            n_local_classes=n_local_classes)
+    ing.feed(np.asarray(crops), np.asarray(frames, np.int64))
+    return ing.finish()

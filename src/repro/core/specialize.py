@@ -76,10 +76,14 @@ def specialize(sample_crops: np.ndarray, sample_gt_labels: np.ndarray,
     for li, g in enumerate(keep):
         local[sample_gt_labels == g] = li
 
-    # equal-class re-weighting (paper footnote 2)
+    # equal-class re-weighting (paper footnote 2). ``Ls`` may exceed the
+    # number of observed classes (keep is then just the observed set) and a
+    # sample may contain a single class — the normalizer below must stay
+    # finite in both cases, so guard the empty-positive edge.
     counts = np.bincount(local, minlength=cmap.n_local).astype(np.float64)
     w = np.where(counts > 0, counts.sum() / np.maximum(counts, 1), 0.0)
-    w = w / w[counts > 0].mean()
+    pos = counts > 0
+    w = w / w[pos].mean() if pos.any() else np.ones_like(w)
     weights = jnp.asarray(w, jnp.float32)
 
     cfg = dataclasses.replace(base_cfg,

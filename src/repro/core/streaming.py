@@ -1,0 +1,519 @@
+"""Streaming multi-stream ingest with query-while-ingest (paper §5, Fig. 4).
+
+Focus's deployment shape is a fleet of cameras ingested *continuously*
+while "after the fact" queries arrive mid-stream. ``StreamingIngestor``
+accepts chunked ``(crops, frames)`` feeds for one stream and maintains
+clustering state + the top-K index incrementally across calls — carrying
+``slot_cid``, pixel-track roots, and eviction remaps over chunk
+boundaries. ``MultiStreamRunner`` round-robins N streams through one
+shared bucket-padded cheap-CNN executable.
+
+Determinism contract (pinned by ``tests/test_streaming.py``): chunk
+boundaries are invisible. Unique objects are buffered and cut into CNN
+batches of exactly ``cfg.batch_size``, so the batch partition — and with
+it the clustering fold order, slot -> cid assignment, and eviction points
+— is a function of the concatenated stream only. Pixel-diff duplicates
+go to the index's separate attach log, canonicalized at read/save time,
+so *when* the driver flushed them is equally invisible. One-shot
+``ingest()`` is the single-chunk special case, and a chunked run saves
+byte-identically to it.
+
+Freshness model for query-while-ingest: ``feed`` folds every complete
+batch immediately; ``flush`` attaches the pixel-diff duplicates whose
+root's batch has folded and publishes an ``IngestDelta`` naming the
+new/moved clusters, which is exactly what a ``QueryEngine`` needs to
+``prefetch`` so warm queries between chunks stay off the GT-CNN path.
+The only objects a query cannot see yet are the < ``batch_size`` uniques
+still waiting for a full batch and the duplicates chained to them.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.core import clustering as C
+from repro.core.index import ClassMap, TopKIndex
+from repro.core.ingest import IngestConfig, IngestStats
+from repro.data.bgsub import pixel_difference
+
+
+@dataclass
+class IngestDelta:
+    """What one ``flush()`` made newly visible to queries."""
+    n_objects_published: int         # uniques folded + duplicates attached
+    new_cids: List[int]              # clusters created since the last flush
+    touched_cids: List[int]          # clusters whose centroid moved (sorted,
+                                     # includes the new ones)
+    n_evictions: int
+    n_pending_unique: int            # buffered, awaiting a full CNN batch
+    n_pending_dups: int              # awaiting their root's batch
+
+
+class _PixelTracker:
+    """Streaming §4.2 pixel differencing.
+
+    Mirrors ``ingest.pixel_tracks`` exactly, but over an unbounded stream:
+    a frame group may arrive split across chunks (the *open* frame keeps
+    accepting members until a later frame appears), while the previous
+    frame's completed group — crops and resolved root ids — is retained
+    for matching. Requires frames to arrive in non-decreasing order.
+    """
+
+    def __init__(self, threshold: float):
+        self.threshold = threshold
+        self._open_frame: Optional[int] = None
+        self._open_crops: List[np.ndarray] = []
+        self._open_roots: List[np.ndarray] = []
+        self._prev_frame: Optional[int] = None
+        self._prev_crops: Optional[np.ndarray] = None
+        self._prev_roots: Optional[np.ndarray] = None
+
+    def resolve(self, f: int, crops: np.ndarray,
+                obj_ids: np.ndarray) -> np.ndarray:
+        """Root object ids for one (possibly partial) frame-``f`` group."""
+        if self._open_frame is not None and f < self._open_frame:
+            raise ValueError(
+                f"frames must be non-decreasing across feeds: got frame {f} "
+                f"after frame {self._open_frame}")
+        if self._open_frame is None or f > self._open_frame:
+            if self._open_crops:
+                self._prev_frame = self._open_frame
+                self._prev_crops = np.concatenate(self._open_crops)
+                self._prev_roots = np.concatenate(self._open_roots)
+            self._open_frame = f
+            self._open_crops, self._open_roots = [], []
+        roots = obj_ids.copy()
+        if self._prev_frame == f - 1 and self._prev_crops is not None \
+                and len(self._prev_crops):
+            match = pixel_difference(crops, self._prev_crops, self.threshold)
+            m = match >= 0
+            roots[m] = self._prev_roots[match[m]]
+        self._open_crops.append(crops)
+        self._open_roots.append(roots)
+        return roots
+
+
+class StreamingIngestor:
+    """Incremental Focus ingest for one stream, fed in chunks.
+
+    ``cheap_apply(crops (B,R,R,3)) -> (probs (B, C_local), feats (B, D))``
+    may be ``None`` when the ingestor is driven by a ``MultiStreamRunner``
+    (which supplies CNN outputs for stacked device batches). ``feed`` /
+    ``flush`` / ``finish`` are the lifecycle; ``ingest()`` in
+    ``core.ingest`` is the single-chunk wrapper.
+    """
+
+    def __init__(self, cheap_apply: Optional[Callable] = None,
+                 cheap_flops_per_image: float = 0.0,
+                 cfg: Optional[IngestConfig] = None,
+                 class_map: Optional[ClassMap] = None,
+                 n_local_classes: Optional[int] = None):
+        self.cheap_apply = cheap_apply
+        self.cheap_flops_per_image = cheap_flops_per_image
+        self.cfg = cfg if cfg is not None else IngestConfig()
+        self.class_map = class_map
+        self.n_local_classes = n_local_classes
+        self.stats = IngestStats()
+        try:
+            self._cluster_fn = C.CLUSTER_FNS[self.cfg.clustering]
+        except KeyError:
+            raise ValueError(
+                f"unknown clustering variant {self.cfg.clustering!r}; "
+                f"expected one of {sorted(C.CLUSTER_FNS)}") from None
+        # the index exists up front whenever the class width is known, so a
+        # QueryEngine can bind to it before the first chunk arrives
+        self._index: Optional[TopKIndex] = None
+        if n_local_classes is not None or class_map is not None:
+            nl = (n_local_classes if n_local_classes is not None
+                  else class_map.n_local)
+            self._index = TopKIndex(self.cfg.K, nl, class_map)
+        self._state = None                      # lazy: dims from first batch
+        self._slot_cid = np.full(self.cfg.max_clusters, -1, np.int64)
+        self._next_cid = 0
+        self._tracker = _PixelTracker(self.cfg.pixel_diff_threshold)
+        # unique-object buffer, awaiting a full CNN batch
+        self._buf_crops: Optional[np.ndarray] = None
+        self._buf_objs = np.zeros((0,), np.int64)
+        self._buf_frames = np.zeros((0,), np.int64)
+        # pixel-diff duplicates awaiting their root's batch
+        self._dup_objs: List[np.ndarray] = []
+        self._dup_frames: List[np.ndarray] = []
+        self._dup_roots: List[np.ndarray] = []
+        self._root_cid: Dict[int, int] = {}     # folded unique obj -> cid
+        self._n_seen = 0
+        self._max_frame: Optional[int] = None
+        self._finished = False
+        # delta accounting between flushes
+        self._delta_new: List[int] = []
+        self._delta_touched: set = set()
+        self._delta_evictions = 0
+        self._delta_published = 0
+
+    # -- queryable state -------------------------------------------------------
+
+    @property
+    def index(self) -> Optional[TopKIndex]:
+        """The live index (None until the class width is known)."""
+        return self._index
+
+    @property
+    def n_ready_batches(self) -> int:
+        return len(self._buf_objs) // self.cfg.batch_size
+
+    @property
+    def n_pending_unique(self) -> int:
+        return len(self._buf_objs)
+
+    @property
+    def n_pending_dups(self) -> int:
+        return int(sum(len(a) for a in self._dup_objs))
+
+    # -- feeding ---------------------------------------------------------------
+
+    def feed(self, crops: np.ndarray, frames: np.ndarray,
+             obj_ids: Optional[np.ndarray] = None):
+        """Ingest one chunk. Frames must be non-decreasing across feeds
+        (chunks may split a frame's objects; the open frame keeps
+        accepting members). ``obj_ids`` defaults to arrival positions in
+        the concatenated stream.
+        """
+        if self._finished:
+            raise RuntimeError("feed() after finish()")
+        t0 = time.perf_counter()
+        crops = np.asarray(crops)
+        frames = np.asarray(frames, np.int64)
+        n = len(crops)
+        if obj_ids is None:
+            obj_ids = np.arange(self._n_seen, self._n_seen + n,
+                                dtype=np.int64)
+        else:
+            obj_ids = np.asarray(obj_ids, np.int64)
+        self._n_seen += n
+        self.stats.n_objects += n
+        if n == 0:
+            return
+        order = np.argsort(frames, kind="stable")
+        crops, frames, obj_ids = crops[order], frames[order], obj_ids[order]
+        # the contract holds with or without pixel differencing: an
+        # out-of-order chunk would silently move the CNN batch partition
+        # away from the one-shot run's
+        if self._max_frame is not None and frames[0] < self._max_frame:
+            raise ValueError(
+                f"frames must be non-decreasing across feeds: got frame "
+                f"{int(frames[0])} after frame {self._max_frame}")
+        self._max_frame = int(frames[-1])
+
+        if self.cfg.pixel_diff:
+            i = 0
+            while i < n:
+                f = int(frames[i])
+                j = i
+                while j < n and frames[j] == f:
+                    j += 1
+                roots = self._tracker.resolve(f, crops[i:j], obj_ids[i:j])
+                uniq = roots == obj_ids[i:j]
+                self._buffer_unique(crops[i:j][uniq], obj_ids[i:j][uniq],
+                                    frames[i:j][uniq])
+                if not uniq.all():
+                    dup = ~uniq
+                    self._dup_objs.append(obj_ids[i:j][dup])
+                    self._dup_frames.append(frames[i:j][dup])
+                    self._dup_roots.append(roots[dup])
+                    self.stats.n_pixel_dedup += int(dup.sum())
+                i = j
+        else:
+            self._buffer_unique(crops, obj_ids, frames)
+        self.stats.wall_s += time.perf_counter() - t0
+        if self.cheap_apply is not None:
+            self._drain_ready()
+
+    def _buffer_unique(self, crops, obj_ids, frames):
+        if len(obj_ids) == 0:
+            return
+        if self._buf_crops is None:
+            self._buf_crops = crops
+        else:
+            self._buf_crops = np.concatenate([self._buf_crops, crops])
+        self._buf_objs = np.concatenate([self._buf_objs, obj_ids])
+        self._buf_frames = np.concatenate([self._buf_frames, frames])
+
+    def take_ready_batch(self):
+        """Pop one full CNN batch of buffered uniques (runner API)."""
+        b = self.cfg.batch_size
+        return self._take(b)
+
+    def take_tail(self):
+        """Pop the remaining partial batch (runner finish)."""
+        return self._take(len(self._buf_objs))
+
+    def _take(self, k: int):
+        crops = self._buf_crops[:k]
+        objs = self._buf_objs[:k]
+        frames = self._buf_frames[:k]
+        self._buf_crops = self._buf_crops[k:]
+        self._buf_objs = self._buf_objs[k:]
+        self._buf_frames = self._buf_frames[k:]
+        return crops, objs, frames
+
+    def _drain_ready(self):
+        while self.n_ready_batches:
+            crops, objs, frames = self.take_ready_batch()
+            t0 = time.perf_counter()
+            probs, feats = self.cheap_apply(crops)
+            self.stats.wall_s += time.perf_counter() - t0
+            self.fold_batch(crops, objs, frames, probs, feats)
+
+    # -- the chunk-step --------------------------------------------------------
+
+    def fold_batch(self, crops: np.ndarray, obj_ids: np.ndarray,
+                   frames: np.ndarray, probs: np.ndarray,
+                   feats: np.ndarray):
+        """Fold one CNN batch of unique objects into clustering state and
+        the index — the loop body of the old one-shot ``ingest()``, with
+        ``slot_cid`` / eviction remaps carried across calls.
+        """
+        t0 = time.perf_counter()
+        probs = np.asarray(probs)
+        feats = np.asarray(feats, np.float32)
+        self.stats.n_cnn_invocations += len(obj_ids)
+        self.stats.cheap_flops += len(obj_ids) * self.cheap_flops_per_image
+
+        if self.n_local_classes is None:
+            self.n_local_classes = probs.shape[1]
+        if self._index is None:
+            self._index = TopKIndex(self.cfg.K, self.n_local_classes,
+                                    self.class_map)
+        if self._state is None:
+            self._state = C.init_state(self.cfg.max_clusters, feats.shape[1])
+
+        state, slots = self._cluster_fn(self._state, feats,
+                                        self.cfg.threshold)
+        slots = np.asarray(slots)
+
+        # slot -> cid, assigning fresh cids in first-appearance order
+        unmapped = self._slot_cid[slots] < 0
+        if unmapped.any():
+            new_slots, first_pos = np.unique(slots[unmapped],
+                                             return_index=True)
+            order = np.argsort(first_pos, kind="stable")
+            fresh = self._next_cid + np.arange(len(new_slots))
+            self._slot_cid[new_slots[order]] = fresh
+            self._next_cid += len(new_slots)
+            self._delta_new.extend(fresh.tolist())
+        cids = self._slot_cid[slots]
+        self._root_cid.update(zip(obj_ids.tolist(), cids.tolist()))
+
+        touched = self._index.add_batch(cids, feats, probs, obj_ids, frames,
+                                        crops=crops)
+        self._delta_touched.update(
+            self._index.store.row_cids[touched].tolist())
+        self._delta_published += len(obj_ids)
+
+        # eviction keeps the live table at M (paper: evict smallest)
+        if int(state.n) >= int(self.cfg.high_water * self.cfg.max_clusters):
+            state, evicted, remap = C.evict_smallest(state,
+                                                     self.cfg.evict_frac)
+            self.stats.n_evictions += len(evicted)
+            self._delta_evictions += len(evicted)
+            new_slot_cid = np.full_like(self._slot_cid, -1)
+            live = remap >= 0
+            new_slot_cid[remap[live]] = self._slot_cid[live]
+            self._slot_cid = new_slot_cid
+        self._state = state
+        self.stats.wall_s += time.perf_counter() - t0
+
+    # -- publication -----------------------------------------------------------
+
+    def _attach_eligible(self):
+        """Attach pending duplicates whose root's batch has folded."""
+        if not self._dup_objs:
+            return
+        objs = np.concatenate(self._dup_objs)
+        frames = np.concatenate(self._dup_frames)
+        roots = np.concatenate(self._dup_roots)
+        cids = np.array([self._root_cid.get(r, -1) for r in roots.tolist()],
+                        np.int64)
+        ready = cids >= 0
+        if ready.any():
+            self._index.attach(cids[ready], objs[ready], frames[ready])
+            self._delta_published += int(ready.sum())
+        hold = ~ready
+        if hold.any():
+            self._dup_objs = [objs[hold]]
+            self._dup_frames = [frames[hold]]
+            self._dup_roots = [roots[hold]]
+        else:
+            self._dup_objs, self._dup_frames, self._dup_roots = [], [], []
+
+    def _prune_root_cids(self):
+        """Drop root -> cid entries no future duplicate can reference: new
+        dups only ever point at roots in the tracker's open/previous frame
+        groups, and held dups carry their root explicitly. Keeps the map
+        O(active window) over a continuously ingested stream instead of
+        O(total unique objects)."""
+        keep = set()
+        for seg in self._tracker._open_roots:
+            keep.update(seg.tolist())
+        if self._tracker._prev_roots is not None:
+            keep.update(self._tracker._prev_roots.tolist())
+        for seg in self._dup_roots:
+            keep.update(seg.tolist())
+        self._root_cid = {r: c for r, c in self._root_cid.items()
+                          if r in keep}
+
+    def flush(self) -> IngestDelta:
+        """Publish what has been ingested so far: attach eligible
+        duplicates and report the clusters a query-side cache needs to
+        refresh. Does NOT fold the partial unique batch — the batch
+        partition must stay a function of the stream alone (that is what
+        makes chunked and one-shot ingests identical)."""
+        t0 = time.perf_counter()
+        self._attach_eligible()
+        self._prune_root_cids()
+        delta = IngestDelta(
+            n_objects_published=self._delta_published,
+            new_cids=list(self._delta_new),
+            touched_cids=sorted(self._delta_touched),
+            n_evictions=self._delta_evictions,
+            n_pending_unique=self.n_pending_unique,
+            n_pending_dups=self.n_pending_dups)
+        self._delta_new = []
+        self._delta_touched = set()
+        self._delta_evictions = 0
+        self._delta_published = 0
+        self.stats.wall_s += time.perf_counter() - t0
+        return delta
+
+    def finish(self) -> Tuple[TopKIndex, IngestStats]:
+        """Drain the final partial batch, attach the remaining duplicates,
+        and return ``(index, stats)`` — after this the ingestor is closed."""
+        if self._finished:
+            return self._index, self.stats
+        if self.cheap_apply is not None:
+            self._drain_ready()
+        if len(self._buf_objs):
+            if self.cheap_apply is None:
+                raise RuntimeError(
+                    "pending unique objects but no cheap_apply; a "
+                    "runner-driven ingestor must be finished through "
+                    "MultiStreamRunner.finish()")
+            crops, objs, frames = self.take_tail()
+            t0 = time.perf_counter()
+            probs, feats = self.cheap_apply(crops)
+            self.stats.wall_s += time.perf_counter() - t0
+            self.fold_batch(crops, objs, frames, probs, feats)
+        if self._index is None:          # empty stream: class width from the
+            nl = (self.n_local_classes   # class map, never dropped
+                  if self.n_local_classes is not None
+                  else (self.class_map.n_local
+                        if self.class_map is not None else 0))
+            self._index = TopKIndex(self.cfg.K, nl, self.class_map)
+        self._attach_eligible()
+        # anything still pending has an unknown root (defensive, mirrors the
+        # old one-shot valid-root filter): drop it
+        self._dup_objs, self._dup_frames, self._dup_roots = [], [], []
+        self._finished = True
+        return self._index, self.stats
+
+
+class MultiStreamRunner:
+    """Round-robins N per-stream ingestors through ONE shared cheap CNN.
+
+    Ready batches (exactly ``cfg.batch_size`` unique crops each) from all
+    streams are stacked into one device batch, bucket-padded to reuse the
+    same compiled executable, classified in a single ``cheap_apply`` call,
+    and split back per stream. Per-stream fold order is preserved, so each
+    stream's index is identical to a self-driven run (``cheap_apply`` must
+    be per-example pure, which holds for the inference CNNs here). When a
+    mesh is given, the stacked batch is placed with
+    ``distributed.sharding.batch_spec`` so the forward pass shards over
+    the data axis.
+    """
+
+    def __init__(self, ingestors: Mapping[str, StreamingIngestor],
+                 cheap_apply: Callable, batch_pad: int = 64, mesh=None):
+        if not ingestors:
+            raise ValueError("need at least one ingestor")
+        for name, ing in ingestors.items():
+            if ing.cheap_apply is not None:
+                raise ValueError(
+                    f"ingestor {name!r} owns a cheap_apply; runner-driven "
+                    f"ingestors must be constructed with cheap_apply=None")
+        self.ingestors: Dict[str, StreamingIngestor] = dict(ingestors)
+        self.cheap_apply = cheap_apply
+        self.batch_pad = batch_pad
+        self.mesh = mesh
+        self._rotation = list(self.ingestors)
+
+    def feed(self, feeds: Mapping[str, Tuple[np.ndarray, np.ndarray]]):
+        """Feed per-stream chunks, then fold every ready batch."""
+        for name, (crops, frames) in feeds.items():
+            self.ingestors[name].feed(crops, frames)
+        self.drain()
+
+    def step(self) -> int:
+        """One stacked device batch: up to one ready batch per stream, in
+        rotating order so streams take turns leading the stack. Returns
+        the number of objects folded (0 = nothing ready)."""
+        parts = []
+        for name in self._rotation:
+            ing = self.ingestors[name]
+            if ing.n_ready_batches:
+                parts.append((ing, *ing.take_ready_batch()))
+        self._rotation = self._rotation[1:] + self._rotation[:1]
+        if not parts:
+            return 0
+        self._fold_stacked(parts)
+        return int(sum(len(p[2]) for p in parts))
+
+    def drain(self):
+        while self.step():
+            pass
+
+    def _fold_stacked(self, parts):
+        from repro.core.query import pad_to_bucket
+        t0 = time.perf_counter()
+        stacked = np.concatenate([p[1] for p in parts])
+        n = len(stacked)
+        padded = pad_to_bucket(stacked, self.batch_pad)
+        if self.mesh is not None:
+            try:
+                import jax
+                from jax.sharding import NamedSharding
+
+                from repro.distributed.sharding import batch_spec
+                padded = jax.device_put(
+                    padded, NamedSharding(self.mesh,
+                                          batch_spec(self.mesh,
+                                                     padded.ndim - 1)))
+            except (ValueError, RuntimeError):
+                pass                     # indivisible batch / CPU fallback
+        probs, feats = self.cheap_apply(padded)
+        probs = np.asarray(probs)[:n]
+        feats = np.asarray(feats)[:n]
+        cnn_s = time.perf_counter() - t0     # shared pass, attributed below
+        off = 0
+        for ing, crops, objs, frames in parts:
+            k = len(objs)
+            ing.stats.wall_s += cnn_s * (k / n)
+            ing.fold_batch(crops, objs, frames, probs[off:off + k],
+                           feats[off:off + k])
+            off += k
+
+    def flush(self) -> Dict[str, IngestDelta]:
+        self.drain()
+        return {name: ing.flush() for name, ing in self.ingestors.items()}
+
+    def finish(self) -> Dict[str, Tuple[TopKIndex, IngestStats]]:
+        """Fold the ragged per-stream tails in one final stacked pass,
+        then finalize every ingestor."""
+        self.drain()
+        parts = [(ing, *ing.take_tail())
+                 for ing in self.ingestors.values()
+                 if ing.n_pending_unique]
+        if parts:
+            self._fold_stacked(parts)
+        return {name: ing.finish() for name, ing in self.ingestors.items()}

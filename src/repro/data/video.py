@@ -141,6 +141,41 @@ class VideoStream:
                 crop = np.clip(tr.proto + drift, 0, 1).astype(np.float32)
                 yield DetectedObject(t, tr.track_id, crop, tr.cls)
 
+    def object_chunks(self, chunk_frames: int,
+                      max_frames: Optional[int] = None,
+                      frame_stride: int = 1) -> Iterator[tuple]:
+        """Lazily yield ``(crops, frames, tracks, labels)`` per window of
+        ``chunk_frames`` consecutive frames — the feed unit for
+        ``core.streaming.StreamingIngestor`` (frames are non-decreasing
+        within and across chunks). Concatenating all chunks equals
+        ``objects_array`` exactly.
+        """
+        if chunk_frames <= 0:
+            raise ValueError(f"chunk_frames must be positive, "
+                             f"got {chunk_frames}")
+        r = self.cfg.obj_res
+        empty = (np.zeros((0, r, r, 3), np.float32),
+                 np.zeros((0,), np.int64), np.zeros((0,), np.int64),
+                 np.zeros((0,), np.int64))
+        pend: List[DetectedObject] = []
+        window_end = chunk_frames
+
+        def pack(objs):
+            if not objs:
+                return empty
+            return (np.stack([o.crop for o in objs]),
+                    np.array([o.frame_id for o in objs]),
+                    np.array([o.track_id for o in objs]),
+                    np.array([o.true_class for o in objs]))
+
+        for obj in self.object_stream(max_frames, frame_stride):
+            while obj.frame_id >= window_end:
+                yield pack(pend)
+                pend = []
+                window_end += chunk_frames
+            pend.append(obj)
+        yield pack(pend)
+
     def objects_array(self, max_frames: Optional[int] = None,
                       frame_stride: int = 1):
         """Materialize the stream: (crops (N,R,R,3), frames (N,), tracks (N,),

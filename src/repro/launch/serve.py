@@ -7,6 +7,15 @@ are reported against the Ingest-all / Query-all baselines.
 
   PYTHONPATH=src python -m repro.launch.serve --stream lausanne \
       --policy balance --duration 60
+
+With ``--stream-chunks N`` the ingest runs *streaming*: the stream is fed
+in N chunks through a ``StreamingIngestor`` and the query workload is
+served between chunks from the live, still-growing index
+(query-while-ingest) — each round reports freshness latency and warm-cache
+hit rates. The CNN batch size is scaled down to the chunk so every round
+publishes; the final index is identical to a one-shot run at that same
+batch size (chunking itself never changes the result — only the batch
+size does).
 """
 from __future__ import annotations
 
@@ -20,7 +29,47 @@ from repro.core.ingest import IngestConfig, ingest
 from repro.core.params import select, sweep
 from repro.core.query import (dominant_classes, gpu_seconds,
                               gt_frames_by_class, precision_recall)
+from repro.core.streaming import StreamingIngestor
 from repro.data import get_stream
+
+
+def _streaming_ingest(crops, frames, apply_fn, acc_flops, cfg, class_map,
+                      workload, gt_apply, gt_flops, n_chunks):
+    """Feed the stream in chunks, serving the query workload between
+    chunks from the live index. Returns (index, stats, warm engine) — the
+    engine's GT-label cache stays valid for the post-ingest query rounds.
+    """
+    ing = StreamingIngestor(apply_fn, acc_flops, cfg, class_map=class_map)
+    engine = None
+    bounds = np.linspace(0, len(crops), n_chunks + 1).astype(int)
+    for rnd, (lo, hi) in enumerate(zip(bounds, bounds[1:])):
+        t0 = time.perf_counter()
+        ing.feed(crops[lo:hi], frames[lo:hi])
+        feed_ms = (time.perf_counter() - t0) * 1e3
+        # freshness = flush + prefetch + warm queries (ingest excluded,
+        # matching benchmarks/streaming_bench.py)
+        t1 = time.perf_counter()
+        delta = ing.flush()
+        if ing.index is None:
+            continue                       # class width not yet known
+        if engine is None:
+            engine = QueryEngine(ing.index, gt_apply=gt_apply,
+                                 gt_flops_per_image=gt_flops)
+        fresh_gt = engine.prefetch(delta.touched_cids)
+        results, batch = engine.query_many(workload)
+        fresh_ms = (time.perf_counter() - t1) * 1e3
+        frames_seen = int(sum(len(r.frames) for r in results))
+        print(f"[serve] chunk {rnd}: +{hi - lo} objs in {feed_ms:.0f}ms "
+              f"({delta.n_objects_published} published, "
+              f"{delta.n_pending_unique} buffered) | "
+              f"{len(delta.touched_cids)} clusters touched, "
+              f"{fresh_gt} prefetched GT | {batch.n_queries} queries warm "
+              f"({batch.n_cache_hits}/{batch.n_unique_candidates} cached, "
+              f"{frames_seen} frames) | freshness {fresh_ms:.0f}ms")
+    index, stats = ing.finish()
+    if engine is not None:
+        engine.prefetch(ing.flush().touched_cids)
+    return index, stats, engine
 
 
 def main():
@@ -35,6 +84,10 @@ def main():
     ap.add_argument("--rounds", type=int, default=3,
                     help="query-workload rounds (round 1 is cold, the rest "
                          "exercise the warm GT-label cache)")
+    ap.add_argument("--stream-chunks", type=int, default=0,
+                    help="feed the stream in N chunks and serve the query "
+                         "workload between chunks (query-while-ingest); "
+                         "0 = one-shot ingest")
     ap.add_argument("--index-out", default=None)
     args = ap.parse_args()
 
@@ -64,14 +117,33 @@ def main():
 
     # ingest with the chosen config
     mid = choice.candidate.model_id
+    gtf_apply = gt_oracle(labels)
+    workload = [int(x) for x in dominant_classes(labels)]
+    cfg = IngestConfig(K=choice.candidate.K, threshold=choice.candidate.T,
+                       max_clusters=2048)
     t0 = time.perf_counter()
-    index, stats = ingest(crops, frames, models[mid][0], models[mid][1],
-                          IngestConfig(K=choice.candidate.K,
-                                       threshold=choice.candidate.T,
-                                       max_clusters=2048),
-                          class_map=cmaps[mid])
+    engine = None
+    if args.stream_chunks > 0:
+        # freshness scales with the CNN batch cut: size batches to the
+        # chunk so each round actually publishes (the partition is still a
+        # function of the stream alone, not of the chunking)
+        import dataclasses
+        chunk = max(1, -(-len(crops) // args.stream_chunks))
+        cfg = dataclasses.replace(cfg,
+                                  batch_size=max(16, min(cfg.batch_size,
+                                                         chunk)))
+        index, stats, engine = _streaming_ingest(
+            crops, frames, models[mid][0], models[mid][1], cfg, cmaps[mid],
+            workload, gtf_apply, GT_FLOPS, args.stream_chunks)
+    else:
+        index, stats = ingest(crops, frames, models[mid][0], models[mid][1],
+                              cfg, class_map=cmaps[mid])
+    # streaming mode: elapsed time includes the interleaved query rounds,
+    # so report the ingestor's own accounted wall instead
+    ingest_s = (stats.wall_s if args.stream_chunks > 0
+                else time.perf_counter() - t0)
     print(f"[serve] ingest: {index.n_clusters} clusters / "
-          f"{index.n_objects} objects in {time.perf_counter()-t0:.1f}s "
+          f"{index.n_objects} objects in {ingest_s:.1f}s "
           f"(GPU-cost {gpu_seconds(stats.cheap_flops):.1f} GPU-s vs "
           f"Ingest-all {gpu_seconds(len(crops)*GT_FLOPS):.1f} GPU-s)")
     if args.index_out:
@@ -80,11 +152,13 @@ def main():
 
     # serve the dominant-class workload through the batched engine: one
     # union + one GT-CNN pass for the whole concurrent batch, centroid
-    # verdicts cached across repeated rounds (steady-state query traffic)
-    engine = QueryEngine(index, gt_apply=gt_oracle(labels),
-                         gt_flops_per_image=GT_FLOPS)
+    # verdicts cached across repeated rounds (steady-state query traffic).
+    # In streaming mode the interleaved rounds' engine carries its warm
+    # GT-label cache straight into these rounds.
+    if engine is None:
+        engine = QueryEngine(index, gt_apply=gtf_apply,
+                             gt_flops_per_image=GT_FLOPS)
     gtf = gt_frames_by_class(labels, frames)
-    workload = [int(x) for x in dominant_classes(labels)]
     ps, rs = [], []
     last = None
     for rnd in range(max(args.rounds, 1)):

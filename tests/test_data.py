@@ -93,3 +93,26 @@ def test_object_stream_respects_frame_stride():
     n1 = len(vs.objects_array(frame_stride=1)[0])
     n5 = len(vs.objects_array(frame_stride=5)[0])
     assert n5 < n1
+
+
+def test_object_chunks_concatenate_to_objects_array():
+    """The streaming feed unit: chunk concatenation equals the one-shot
+    materialization exactly, with non-decreasing frames across chunks."""
+    vs = get_stream("oxford", duration_s=30)
+    want = vs.objects_array()
+    chunks = list(vs.object_chunks(chunk_frames=45))
+    assert len(chunks) > 1
+    last_frame = -1
+    for crops, frames, tracks, labels in chunks:
+        if len(frames):
+            assert frames.min() >= last_frame
+            last_frame = frames.max()
+    got = [np.concatenate([c[i] for c in chunks]) for i in range(4)]
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+
+
+def test_object_chunks_rejects_bad_window():
+    vs = get_stream("oxford", duration_s=10)
+    with pytest.raises(ValueError):
+        next(vs.object_chunks(chunk_frames=0))

@@ -222,7 +222,7 @@ def test_load_legacy_dict_era_format(tmp_path):
 
 
 def test_save_writes_columnar_npz(tmp_path):
-    """Format v2: one npz key per field, not O(M) per-cid keys."""
+    """Format v3: one npz key per field, not O(M) per-cid keys."""
     idx = TopKIndex(K=2, n_local_classes=3)
     p = np.array([0.6, 0.3, 0.1], np.float32)
     for cid in range(20):
@@ -232,14 +232,63 @@ def test_save_writes_columnar_npz(tmp_path):
     keys = set(np.load(path + ".npz").keys())
     assert keys == {"row_cids", "centroids", "mean_probs", "rep_crops",
                     "counts", "first_objs", "versions", "log_cids",
-                    "log_objs", "log_frames"}
+                    "log_objs", "log_frames", "att_cids", "att_objs",
+                    "att_frames"}
     import json as _json
     with open(path + ".json") as f:
         meta = _json.load(f)
-    assert meta["format"] == 2 and "clusters" not in meta
+    assert meta["format"] == 3 and "clusters" not in meta
     idx2 = TopKIndex.load(path)
     assert idx2.summary() == idx.summary()
     assert idx2.clusters[7].members == [7]
+
+
+def test_load_v2_single_log_format(tmp_path):
+    """Format-2 files (single member log, no attach log) still load."""
+    import json as _json
+    path = str(tmp_path / "v2")
+    np.savez_compressed(
+        path + ".npz",
+        row_cids=np.array([0, 1]),
+        centroids=np.eye(2, 4, dtype=np.float32),
+        mean_probs=np.array([[0.6, 0.3, 0.1], [0.1, 0.3, 0.6]], np.float32),
+        rep_crops=np.zeros((2, 4, 4, 3), np.float32),
+        counts=np.array([2, 1]), first_objs=np.array([0, 2]),
+        versions=np.array([1, 1]),
+        log_cids=np.array([0, 0, 1]), log_objs=np.array([0, 1, 2]),
+        log_frames=np.array([0, 1, 2]))
+    with open(path + ".json", "w") as f:
+        _json.dump({"format": 2, "K": 2, "n_local_classes": 3,
+                    "class_map": None}, f)
+    idx = TopKIndex.load(path)
+    assert idx.n_clusters == 2 and idx.n_objects == 3
+    assert idx.clusters[0].members == [0, 1]
+    np.testing.assert_array_equal(idx.frames_of([0, 1]), [0, 1, 2])
+    assert idx.lookup(0) == [0] and idx.lookup(2) == [1]
+
+
+def test_attach_timing_invisible_to_reads_and_save(tmp_path):
+    """Members attached early (mid-stream flush) vs late (one-shot) read
+    and save identically: the attach log is canonicalized by (obj, frame)."""
+    def build(order):
+        idx = TopKIndex(K=2, n_local_classes=3)
+        p = np.array([0.6, 0.3, 0.1], np.float32)
+        f = np.ones((1, 4), np.float32)
+        c = np.zeros((1, 2, 2, 3), np.float32)
+        idx.add_batch(np.array([0]), f, p[None], np.array([0]),
+                      np.array([0]), crops=c)
+        for obj, frame in order:
+            idx.attach(np.array([0]), np.array([obj]), np.array([frame]))
+        return idx
+    early = build([(1, 1), (2, 2)])
+    late = build([(2, 2), (1, 1)])
+    assert early.clusters[0].members == late.clusters[0].members == [0, 1, 2]
+    pa, pb = str(tmp_path / "a"), str(tmp_path / "b")
+    early.save(pa)
+    late.save(pb)
+    for ext in (".json", ".npz"):
+        with open(pa + ext, "rb") as f1, open(pb + ext, "rb") as f2:
+            assert f1.read() == f2.read()
 
 
 def test_columnar_roundtrip_preserves_versions(tmp_path):

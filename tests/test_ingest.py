@@ -1,0 +1,184 @@
+"""Ingest-driver regressions: eviction remap consistency, transitive
+pixel-track chaining, and the empty-stream class-map fix."""
+import numpy as np
+import pytest
+
+from repro.core.index import ClassMap, TopKIndex
+from repro.core.ingest import IngestConfig, ingest, pixel_tracks
+from repro.core.streaming import StreamingIngestor
+
+FEAT_DIM = 12
+N_CLASSES = 5
+
+
+def _cheap(batch):
+    flat = batch.reshape(len(batch), -1)
+    feats = (flat[:, :FEAT_DIM] * 10.0).astype(np.float32)
+    probs = np.abs(flat[:, FEAT_DIM:FEAT_DIM + N_CLASSES]) + 1e-3
+    return (probs / probs.sum(1, keepdims=True)).astype(np.float32), feats
+
+
+# ---------------------------------------------------------------------------
+# eviction remap correctness across repeated evict_smallest cycles
+# ---------------------------------------------------------------------------
+
+def test_repeated_evictions_keep_slot_cid_consistent():
+    """Drive many evict_smallest cycles; the live slot -> cid map must stay
+    a bijection onto real index clusters whose centroids/counts agree with
+    the clustering state (previously only implicitly covered)."""
+    r = np.random.default_rng(0)
+    n, n_modes = 900, 120
+    modes = r.random((n_modes, 6, 6, 3)).astype(np.float32)
+    crops = np.clip(modes[r.integers(0, n_modes, n)]
+                    + r.normal(0, 0.01, (n, 6, 6, 3)), 0, 1
+                    ).astype(np.float32)
+    frames = np.arange(n) // 4
+    cfg = IngestConfig(K=2, threshold=0.8, max_clusters=16, batch_size=64,
+                       pixel_diff=False, high_water=0.8, evict_frac=0.5)
+    ing = StreamingIngestor(_cheap, 1e9, cfg)
+
+    def check():
+        state, slot_cid = ing._state, ing._slot_cid
+        if state is None:
+            return
+        n_live = int(state.n)
+        live_cids = slot_cid[:n_live]
+        assert (live_cids >= 0).all()          # every live slot is mapped
+        assert len(np.unique(live_cids)) == n_live       # bijection
+        assert (slot_cid[n_live:] == -1).all()           # dead slots unmapped
+        rows = ing.index.store.rows_of(live_cids)        # all cids exist
+        np.testing.assert_array_equal(
+            np.asarray(state.counts)[:n_live],
+            ing.index.store.fold_counts[rows])
+        np.testing.assert_allclose(
+            np.asarray(state.centroids)[:n_live],
+            ing.index.store.centroids[rows], atol=2e-3)
+
+    for start in range(0, n, 128):
+        ing.feed(crops[start:start + 128], frames[start:start + 128])
+        check()
+    index, stats = ing.finish()
+    check()
+    # at least two full eviction cycles actually ran
+    per_cycle = max(1, int(int(cfg.high_water * cfg.max_clusters)
+                           * cfg.evict_frac))
+    assert stats.n_evictions >= 2 * per_cycle
+    assert index.n_objects == n                # nothing lost to remapping
+
+
+def test_eviction_does_not_orphan_duplicate_attachment():
+    """Pixel-diff duplicates of roots whose cluster was evicted must still
+    attach to that (now index-only) cluster — slot eviction removes a
+    cluster from the live table, not from the index."""
+    r = np.random.default_rng(1)
+    n, n_modes = 600, 80
+    modes = r.random((n_modes, 6, 6, 3)).astype(np.float32)
+    crops = np.clip(modes[r.integers(0, n_modes, n)]
+                    + r.normal(0, 0.01, (n, 6, 6, 3)), 0, 1
+                    ).astype(np.float32)
+    frames = np.sort(r.integers(0, 150, n))
+    for i in range(1, n):
+        if frames[i] == frames[i - 1] + 1 and r.random() < 0.4:
+            crops[i] = np.clip(crops[i - 1]
+                               + r.normal(0, 1e-3, crops[i].shape),
+                               0, 1).astype(np.float32)
+    cfg = IngestConfig(K=2, threshold=0.8, max_clusters=12, batch_size=48,
+                       high_water=0.8, evict_frac=0.5)
+    index, stats = ingest(crops, frames, _cheap, 1e9, cfg)
+    assert stats.n_evictions > 0 and stats.n_pixel_dedup > 0
+    assert index.n_objects == n
+
+
+# ---------------------------------------------------------------------------
+# pixel-track transitive chaining
+# ---------------------------------------------------------------------------
+
+def _track_crops(k, seed=0):
+    """k near-identical crops, one per consecutive frame."""
+    r = np.random.default_rng(seed)
+    base = r.random((6, 6, 3)).astype(np.float32)
+    crops = np.stack([
+        np.clip(base + r.normal(0, 1e-4, base.shape), 0, 1).astype(np.float32)
+        for _ in range(k)])
+    return crops, np.arange(k)
+
+
+def test_pixel_tracks_chain_transitively_across_three_frames():
+    """An object persisting over >= 3 consecutive frames must chain all
+    later sightings to the *first* sighting's root, not pairwise."""
+    crops, frames = _track_crops(4)
+    roots = pixel_tracks(crops, frames, threshold=0.02)
+    np.testing.assert_array_equal(roots, [0, 0, 0, 0])
+
+
+def test_pixel_tracks_break_on_frame_gap():
+    crops, frames = _track_crops(3)
+    frames = np.array([0, 1, 3])        # gap: frame 3 has no frame-2 match
+    roots = pixel_tracks(crops, frames, threshold=0.02)
+    np.testing.assert_array_equal(roots, [0, 0, 2])
+
+
+def test_streaming_tracker_chains_across_chunk_boundaries():
+    """The same >= 3-frame chain, split one frame per feed() chunk: every
+    duplicate still lands in the root's cluster."""
+    crops, frames = _track_crops(4, seed=2)
+    cfg = IngestConfig(K=2, threshold=0.8, max_clusters=8, batch_size=4)
+    ing = StreamingIngestor(_cheap, 1e9, cfg)
+    for i in range(len(crops)):
+        ing.feed(crops[i:i + 1], frames[i:i + 1])
+    index, stats = ing.finish()
+    assert stats.n_pixel_dedup == 3
+    assert index.n_clusters == 1
+    cid = int(index.store.row_cids[0])
+    assert index.clusters[cid].members == [0, 1, 2, 3]
+    np.testing.assert_array_equal(index.frames_of([cid]), [0, 1, 2, 3])
+
+
+# ---------------------------------------------------------------------------
+# empty-stream class-map fix
+# ---------------------------------------------------------------------------
+
+def test_empty_stream_keeps_class_map_and_width(tmp_path):
+    """Regression: ingest() of an empty stream used to build an index with
+    n_local_classes=0 even when the class map pinned the width — queries on
+    specialized classes then fell outside the rank matrix."""
+    cmap = ClassMap(global_ids=np.array([10, 42, 99]))
+    empty = np.zeros((0, 6, 6, 3), np.float32)
+    no_frames = np.zeros((0,), np.int64)
+    cfg = IngestConfig(K=2)
+
+    index, stats = ingest(empty, no_frames, _cheap, 1e9, cfg,
+                          class_map=cmap, n_local_classes=7)
+    assert index.n_local_classes == 7
+    assert index.class_map is cmap
+
+    # width derived from the class map when not given explicitly
+    index2, _ = ingest(empty, no_frames, _cheap, 1e9, cfg, class_map=cmap)
+    assert index2.n_local_classes == cmap.n_local == 4
+    assert index2.lookup(10) == [] and index2.lookup(777) == []
+
+    # survives persistence
+    path = str(tmp_path / "empty_spec")
+    index2.save(path)
+    loaded = TopKIndex.load(path)
+    assert loaded.n_local_classes == 4
+    assert loaded.class_map is not None
+    np.testing.assert_array_equal(loaded.class_map.global_ids,
+                                  cmap.global_ids)
+
+
+def test_ingest_unsorted_frames_preserves_caller_object_ids():
+    """The one-shot wrapper reorders processing by frame but member/object
+    ids keep referring to the caller's array positions."""
+    r = np.random.default_rng(3)
+    n = 60
+    crops = r.random((n, 6, 6, 3)).astype(np.float32)
+    frames = r.integers(0, 10, n)       # unsorted
+    cfg = IngestConfig(K=2, threshold=50.0, max_clusters=8, batch_size=16,
+                       pixel_diff=False)
+    index, _ = ingest(crops, frames, _cheap, 1e9, cfg)
+    assert index.n_objects == n
+    members = []
+    for cid in index.store.row_cids[:index.store.n_rows].tolist():
+        members.extend(index.clusters[cid].members)
+    assert sorted(members) == list(range(n))

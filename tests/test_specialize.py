@@ -1,0 +1,59 @@
+"""specialize() edge cases (§4.3): Ls larger than the observed class set,
+and single-class samples — the equal-class re-weighting path must stay
+finite (no NaN) in both."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.common.config import CheapCNNConfig
+from repro.core.specialize import specialize
+
+BASE = CheapCNNConfig("tiny", input_res=8, n_blocks=1, width=8,
+                      feature_dim=16)
+
+
+def _sample(labels, seed=0):
+    r = np.random.default_rng(seed)
+    crops = r.random((len(labels), 8, 8, 3)).astype(np.float32)
+    return crops, np.asarray(labels)
+
+
+def test_ls_larger_than_observed_classes():
+    """Ls=6 but only 2 classes observed: the class map keeps just the
+    observed classes and training weights stay finite."""
+    crops, labels = _sample([3, 3, 3, 7, 7, 3, 7, 3])
+    sm = specialize(crops, labels, Ls=6, base_cfg=BASE, steps=2,
+                    batch_size=4)
+    np.testing.assert_array_equal(sm.class_map.global_ids, [3, 7])
+    assert sm.class_map.n_local == 3            # 2 observed + OTHER
+    assert sm.cfg.n_classes == 3
+    assert all(np.isfinite(h["loss"]) for h in sm.history)
+
+
+def test_single_class_sample_weights_finite():
+    """All samples from one class: OTHER gets zero weight, the observed
+    class normalizes to 1, and the loss is finite (previously the
+    ``w / w[counts > 0].mean()`` path could NaN on degenerate splits)."""
+    crops, labels = _sample([5] * 10, seed=1)
+    sm = specialize(crops, labels, Ls=4, base_cfg=BASE, steps=2,
+                    batch_size=4)
+    np.testing.assert_array_equal(sm.class_map.global_ids, [5])
+    assert sm.class_map.n_local == 2
+    assert all(np.isfinite(h["loss"]) for h in sm.history)
+    # the model still classifies (probs finite, normalized)
+    probs, feats = sm.make_apply(batch_pad=4)(crops)
+    assert np.isfinite(probs).all() and np.isfinite(feats).all()
+    np.testing.assert_allclose(probs.sum(1), 1.0, atol=1e-5)
+
+
+def test_empty_sample_does_not_nan():
+    """Degenerate empty sample: weights fall back to ones instead of
+    dividing by an empty mean."""
+    from repro.core.specialize import estimate_distribution
+    classes, counts = estimate_distribution(np.zeros((0,), np.int64))
+    assert len(classes) == 0 and len(counts) == 0
+    # the weight formula itself (extracted): no positives -> all-ones
+    c = np.zeros(3, np.float64)
+    w = np.where(c > 0, c.sum() / np.maximum(c, 1), 0.0)
+    pos = c > 0
+    w = w / w[pos].mean() if pos.any() else np.ones_like(w)
+    assert np.isfinite(w).all()

@@ -1,0 +1,287 @@
+"""Streaming ingest equivalence harness (the property that makes every
+future ingest refactor safe).
+
+Core property: for random streams and random chunk splits, a
+``StreamingIngestor`` fed in chunks — with flushes (and their duplicate
+attaches) interleaved — produces an index *byte-identical on disk* to
+one-shot ``ingest()`` over the concatenated stream, including across
+eviction boundaries. Plus: multi-stream runner equivalence, and
+query-while-ingest returning exactly what a fresh engine sees.
+"""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.engine import QueryEngine
+from repro.core.index import TopKIndex
+from repro.core.ingest import IngestConfig, ingest
+from repro.core.streaming import MultiStreamRunner, StreamingIngestor
+
+FEAT_DIM = 12
+N_CLASSES = 5
+
+
+def _cheap(batch):
+    """Per-example-pure cheap-CNN stub: probs/feats are functions of the
+    crop pixels alone, so stream-private and stacked device batches give
+    identical per-object outputs."""
+    flat = batch.reshape(len(batch), -1)
+    feats = (flat[:, :FEAT_DIM] * 10.0).astype(np.float32)
+    probs = np.abs(flat[:, FEAT_DIM:FEAT_DIM + N_CLASSES]) + 1e-3
+    return (probs / probs.sum(1, keepdims=True)).astype(np.float32), feats
+
+
+def _gt_apply(batch):
+    return np.rint(batch[:, 0, 0, 2] * 8).astype(np.int64) % N_CLASSES
+
+
+def _stream(seed, n=500, n_frames=None, dup_rate=0.35):
+    """Video-shaped stream: sorted frames, mode-patterned crops (so
+    clustering groups them), near-identical consecutive-frame duplicates
+    (so pixel differencing fires)."""
+    r = np.random.default_rng(seed)
+    n_frames = n_frames or max(n // 5, 2)
+    modes = r.random((20, 6, 6, 3)).astype(np.float32)
+    pick = r.integers(0, 20, n)
+    crops = np.clip(modes[pick] + r.normal(0, 0.05, (n, 6, 6, 3)), 0, 1
+                    ).astype(np.float32)
+    frames = np.sort(r.integers(0, n_frames, n))
+    for i in range(1, n):
+        if frames[i] == frames[i - 1] + 1 and r.random() < dup_rate:
+            crops[i] = np.clip(
+                crops[i - 1] + r.normal(0, 1e-3, crops[i].shape), 0, 1
+            ).astype(np.float32)
+    return crops, frames
+
+
+def _save_bytes(index, tag):
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, tag)
+        index.save(path)
+        with open(path + ".json", "rb") as f:
+            meta = f.read()
+        with open(path + ".npz", "rb") as f:
+            npz = f.read()
+        return meta, npz
+
+
+def _chunks(rng_draw, n, max_chunks=12):
+    k = rng_draw(st.integers(1, max_chunks))
+    if k == 1 or n < 2:
+        return [n]
+    cuts = sorted({rng_draw(st.integers(1, n - 1)) for _ in range(k - 1)})
+    bounds = [0] + cuts + [n]
+    return [b - a for a, b in zip(bounds, bounds[1:])]
+
+
+# ---------------------------------------------------------------------------
+# the equivalence property
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.data())
+def test_streaming_equals_oneshot_byte_identical(data):
+    """Random stream, random chunk split, eviction-heavy config: the
+    chunked run (with interleaved flushes) saves byte-identically to the
+    one-shot run."""
+    seed = data.draw(st.integers(0, 10_000), label="seed")
+    n = data.draw(st.integers(0, 400), label="n")
+    batch_size = data.draw(st.sampled_from([32, 64, 100]), label="batch")
+    crops, frames = _stream(seed, n)
+    cfg = IngestConfig(K=2, threshold=1.5, max_clusters=24,
+                       batch_size=batch_size, high_water=0.8,
+                       evict_frac=0.5)
+
+    one_index, one_stats = ingest(crops, frames, _cheap, 1e9, cfg)
+
+    ing = StreamingIngestor(_cheap, 1e9, cfg)
+    for size in _chunks(data.draw, n):
+        taken, crops = crops[:size], crops[size:]
+        tf, frames = frames[:size], frames[size:]
+        ing.feed(taken, tf)
+        ing.flush()                     # interleaved duplicate attaches
+    chunk_index, chunk_stats = ing.finish()
+
+    assert _save_bytes(chunk_index, "s") == _save_bytes(one_index, "o")
+    assert chunk_stats.n_objects == one_stats.n_objects
+    assert chunk_stats.n_cnn_invocations == one_stats.n_cnn_invocations
+    assert chunk_stats.n_pixel_dedup == one_stats.n_pixel_dedup
+    assert chunk_stats.n_evictions == one_stats.n_evictions
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 10_000))
+def test_multi_stream_runner_matches_self_driven(seed):
+    """Two streams through one stacked shared-CNN runner == each stream
+    ingested on its own, byte for byte."""
+    cfg = IngestConfig(K=2, threshold=1.5, max_clusters=32, batch_size=48,
+                       high_water=0.85, evict_frac=0.4)
+    streams = {name: _stream(seed + i, 300 + 40 * i)
+               for i, name in enumerate(["cam_a", "cam_b"])}
+
+    solo = {name: ingest(c, f, _cheap, 1e9, cfg)[0]
+            for name, (c, f) in streams.items()}
+
+    runner = MultiStreamRunner(
+        {name: StreamingIngestor(None, 1e9, cfg) for name in streams},
+        _cheap, batch_pad=32)
+    # interleave feeds chunk by chunk (uneven chunk sizes per stream)
+    cursors = {name: 0 for name in streams}
+    sizes = {"cam_a": 77, "cam_b": 130}
+    while any(cursors[nm] < len(streams[nm][0]) for nm in streams):
+        feeds = {}
+        for nm in streams:
+            c, f = streams[nm]
+            i = cursors[nm]
+            if i < len(c):
+                feeds[nm] = (c[i:i + sizes[nm]], f[i:i + sizes[nm]])
+                cursors[nm] = i + sizes[nm]
+        runner.feed(feeds)
+        runner.flush()
+    finished = runner.finish()
+
+    for name in streams:
+        idx, _ = finished[name]
+        assert _save_bytes(idx, name) == _save_bytes(solo[name], name + "s")
+
+
+# ---------------------------------------------------------------------------
+# query-while-ingest
+# ---------------------------------------------------------------------------
+
+def test_query_while_ingest_matches_fresh_engine():
+    """Between chunks, a long-lived warm engine must answer exactly like a
+    cold engine built on the same index snapshot (precise version-keyed
+    invalidation), and the final interleaved round equals post-hoc."""
+    crops, frames = _stream(3, 600)
+    cfg = IngestConfig(K=3, threshold=1.5, max_clusters=48, batch_size=64,
+                       high_water=0.85, evict_frac=0.4)
+    ing = StreamingIngestor(_cheap, 1e9, cfg, n_local_classes=N_CLASSES)
+    warm = QueryEngine(ing.index, gt_apply=_gt_apply,
+                       gt_flops_per_image=1e9)
+    workload = list(range(N_CLASSES))
+    last = None
+    for start in range(0, len(crops), 150):
+        ing.feed(crops[start:start + 150], frames[start:start + 150])
+        delta = ing.flush()
+        warm.prefetch(delta.touched_cids)
+        results, batch = warm.query_many(workload)
+        assert batch.n_gt_invocations == 0      # prefetch took the GT cost
+        fresh = QueryEngine(ing.index, gt_apply=_gt_apply,
+                            gt_flops_per_image=1e9)
+        fresh_results, _ = fresh.query_many(workload)
+        for a, b in zip(results, fresh_results):
+            np.testing.assert_array_equal(a.frames, b.frames)
+            assert a.matched_clusters == b.matched_clusters
+        last = results
+    index, _ = ing.finish()
+    warm.prefetch(ing.flush().touched_cids)
+    final, _ = warm.query_many(workload)
+    posthoc = QueryEngine(index, gt_apply=_gt_apply, gt_flops_per_image=1e9)
+    posthoc_results, _ = posthoc.query_many(workload)
+    for a, b in zip(final, posthoc_results):
+        np.testing.assert_array_equal(a.frames, b.frames)
+    assert last is not None
+
+
+def test_flush_delta_names_new_and_touched_clusters():
+    crops, frames = _stream(11, 200)
+    cfg = IngestConfig(K=2, threshold=1.5, max_clusters=64, batch_size=50,
+                       pixel_diff=False)
+    ing = StreamingIngestor(_cheap, 1e9, cfg)
+    ing.feed(crops, frames)
+    delta = ing.flush()
+    assert delta.n_objects_published == 200 - delta.n_pending_unique
+    assert set(delta.new_cids) <= set(delta.touched_cids)
+    versions = {int(c): int(ing.index.store.versions[ing.index.store.row_of(c)])
+                for c in delta.touched_cids}
+    assert all(v >= 1 for v in versions.values())
+    # a flush with nothing new publishes nothing
+    empty = ing.flush()
+    assert empty.n_objects_published == 0 and empty.touched_cids == []
+    # the tail only folds at finish
+    index, stats = ing.finish()
+    assert index.n_objects == 200
+    assert stats.n_cnn_invocations == 200
+
+
+# ---------------------------------------------------------------------------
+# lifecycle / contract errors
+# ---------------------------------------------------------------------------
+
+def test_flush_prunes_root_cid_map_to_active_window():
+    """The root -> cid map must stay O(active frame window) over a long
+    stream, not O(total unique objects) — and pruning must not change the
+    result (covered by the byte-identity property, which flushes)."""
+    crops, frames = _stream(5, 800, n_frames=400)
+    cfg = IngestConfig(K=2, threshold=1.5, max_clusters=64, batch_size=32)
+    ing = StreamingIngestor(_cheap, 1e9, cfg)
+    sizes = []
+    for start in range(0, len(crops), 100):
+        ing.feed(crops[start:start + 100], frames[start:start + 100])
+        ing.flush()
+        sizes.append(len(ing._root_cid))
+    n_unique = ing.stats.n_objects - ing.stats.n_pixel_dedup \
+        - ing.n_pending_unique
+    assert max(sizes) < 0.5 * n_unique      # pruned, not accumulated
+    index, _ = ing.finish()
+    assert index.n_objects == 800           # nothing lost to pruning
+
+
+def test_feed_rejects_decreasing_frames_across_chunks():
+    cfg = IngestConfig(batch_size=32)
+    ing = StreamingIngestor(_cheap, 1e9, cfg)
+    crops = np.random.default_rng(0).random((4, 6, 6, 3)).astype(np.float32)
+    ing.feed(crops, np.array([5, 5, 6, 7]))
+    with pytest.raises(ValueError):
+        ing.feed(crops, np.array([3, 3, 4, 4]))
+
+
+def test_feed_rejects_decreasing_frames_without_pixel_diff():
+    """The contract is enforced even when pixel differencing is off — an
+    out-of-order chunk would silently move the CNN batch partition away
+    from the one-shot run's."""
+    cfg = IngestConfig(batch_size=32, pixel_diff=False)
+    ing = StreamingIngestor(_cheap, 1e9, cfg)
+    crops = np.random.default_rng(0).random((4, 6, 6, 3)).astype(np.float32)
+    ing.feed(crops, np.array([5, 5, 6, 7]))
+    with pytest.raises(ValueError):
+        ing.feed(crops, np.array([3, 3, 4, 4]))
+
+
+def test_feed_after_finish_raises():
+    ing = StreamingIngestor(_cheap, 1e9, IngestConfig(batch_size=8))
+    crops, frames = _stream(1, 20)
+    ing.feed(crops, frames)
+    ing.finish()
+    with pytest.raises(RuntimeError):
+        ing.feed(crops, frames)
+
+
+def test_runner_rejects_self_driven_ingestors():
+    with pytest.raises(ValueError):
+        MultiStreamRunner({"a": StreamingIngestor(_cheap, 1e9,
+                                                  IngestConfig())}, _cheap)
+    with pytest.raises(ValueError):
+        MultiStreamRunner({}, _cheap)
+
+
+def test_runner_driven_finish_requires_runner():
+    ing = StreamingIngestor(None, 1e9, IngestConfig(batch_size=64))
+    crops, frames = _stream(2, 30)
+    ing.feed(crops, frames)              # buffered: no CNN to drain with
+    with pytest.raises(RuntimeError):
+        ing.finish()
+
+
+def test_empty_feeds_and_empty_finish():
+    ing = StreamingIngestor(_cheap, 1e9, IngestConfig(batch_size=8),
+                            n_local_classes=N_CLASSES)
+    ing.feed(np.zeros((0, 6, 6, 3), np.float32), np.zeros((0,), np.int64))
+    index, stats = ing.finish()
+    assert index.n_clusters == 0 and stats.n_objects == 0
+    assert index.n_local_classes == N_CLASSES
