@@ -1,0 +1,194 @@
+"""Time-sharded archive: cross-shard query fan-out benchmark.
+
+One synthetic multi-day-shaped stream is ingested through a
+``StreamingIngestor`` with shard rollover at several shard counts; an
+``ArchiveQueryEngine`` then serves the dominant-class workload against the
+sealed archive. Reported per shard count:
+
+  * cold / warm query latency and GT-CNN invocations,
+  * GT-CNN *launches* on the cold pass (the fan-out must union uncached
+    rep crops across all shards and all queries into one bucket-padded
+    pass — not one pass per shard),
+  * shard-loader behaviour under a capacity smaller than the shard count
+    (loads / evictions per query round).
+
+Correctness gates (asserted here and in CI):
+  * archive answers equal the union of per-shard ``QueryEngine`` answers,
+  * a warm archive query issues zero GT-CNN invocations,
+  * the cold pass runs ``ceil(misses / batch_size)`` GT launches total,
+    independent of the shard count.
+
+One record per run is appended to the BENCH_archive.json trajectory.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import append_trajectory, emit
+from repro.core.archive import ArchiveQueryEngine, ShardCatalog
+from repro.core.engine import QueryEngine
+from repro.core.ingest import IngestConfig
+from repro.core.streaming import StreamingIngestor
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_archive.json")
+
+N_OBJECTS = 8192
+FEAT_DIM = 64
+N_CLASSES = 16
+N_MODES = 200
+BATCH = 256                   # CNN batch size inside the ingestor
+GT_BATCH = 256                # GT-CNN batch size inside the engines
+SHARD_COUNTS = (1, 4, 8)
+LRU_CAPACITY = 2              # < max(SHARD_COUNTS): forces evictions
+GT_FLOPS = 1.2e11
+
+
+def _make_stream(seed: int):
+    """Video-shaped stream: mode patterns + noise, true class encoded in
+    pixel (0,0,0), consecutive-frame duplicates for pixel differencing."""
+    r = np.random.default_rng(seed)
+    modes = r.random((N_MODES, 8, 8, 3)).astype(np.float32)
+    mode_cls = r.integers(0, N_CLASSES, N_MODES)
+    pick = r.integers(0, N_MODES, N_OBJECTS)
+    crops = np.clip(modes[pick] + r.normal(0, 0.02, (N_OBJECTS, 8, 8, 3)),
+                    0, 1).astype(np.float32)
+    frames = np.sort(r.integers(0, N_OBJECTS // 6, N_OBJECTS))
+    for i in range(1, N_OBJECTS):
+        if frames[i] == frames[i - 1] + 1 and r.random() < 0.3:
+            crops[i] = np.clip(crops[i - 1]
+                               + r.normal(0, 5e-4, crops[i].shape),
+                               0, 1).astype(np.float32)
+    crops[:, 0, 0, 0] = mode_cls[pick] / N_CLASSES
+    return crops, frames
+
+
+def _cheap(batch):
+    flat = batch.reshape(len(batch), -1)
+    feats = (flat[:, :FEAT_DIM] * 8.0).astype(np.float32)
+    probs = np.abs(flat[:, FEAT_DIM:FEAT_DIM + N_CLASSES]) + 1e-3
+    probs[np.arange(len(batch)),
+          np.rint(batch[:, 0, 0, 0] * N_CLASSES).astype(int) % N_CLASSES] += 2.0
+    return (probs / probs.sum(1, keepdims=True)).astype(np.float32), feats
+
+
+class _CountingGT:
+    """GT-CNN stub counting launches (the one-pass gate)."""
+
+    def __init__(self):
+        self.n_calls = 0
+
+    def __call__(self, batch):
+        self.n_calls += 1
+        return np.rint(batch[:, 0, 0, 0] * N_CLASSES).astype(np.int64) \
+            % N_CLASSES
+
+
+def run():
+    crops, frames = _make_stream(0)
+    cfg = IngestConfig(K=4, threshold=1.0, max_clusters=512,
+                       batch_size=BATCH, high_water=0.9, evict_frac=0.25)
+    workload = list(range(N_CLASSES))
+
+    per_shard_count = []
+    equals_union = True
+    single_gt_pass = True
+    warm_zero = True
+    for n_shards in SHARD_COUNTS:
+        with tempfile.TemporaryDirectory() as d:
+            catalog = ShardCatalog.open(d)
+            shard_objects = -(-N_OBJECTS // n_shards)
+            t0 = time.perf_counter()
+            ing = StreamingIngestor(_cheap, 1e9, cfg, catalog=catalog,
+                                    shard_objects=shard_objects)
+            for lo in range(0, N_OBJECTS, 1024):
+                ing.feed(crops[lo:lo + 1024], frames[lo:lo + 1024])
+            ing.finish()
+            ingest_s = time.perf_counter() - t0
+            assert len(catalog) == n_shards, (len(catalog), n_shards)
+
+            gt = _CountingGT()
+            engine = ArchiveQueryEngine(catalog, gt_apply=gt,
+                                        gt_flops_per_image=GT_FLOPS,
+                                        batch_size=GT_BATCH,
+                                        capacity=LRU_CAPACITY)
+            t0 = time.perf_counter()
+            cold_results, cold = engine.query_many(workload)
+            cold_ms = (time.perf_counter() - t0) * 1e3
+            expect_launches = -(-cold.n_gt_invocations // GT_BATCH)
+            if gt.n_calls != expect_launches or \
+                    cold.n_gt_batches != expect_launches:
+                single_gt_pass = False
+
+            t0 = time.perf_counter()
+            warm_results, warm = engine.query_many(workload)
+            warm_ms = (time.perf_counter() - t0) * 1e3
+            if warm.n_gt_invocations != 0:
+                warm_zero = False
+            for a, b in zip(cold_results, warm_results):
+                if not np.array_equal(a.frames, b.frames):
+                    equals_union = False
+
+            # gate: archive answers == union of per-shard engine answers
+            union = {cls: [] for cls in workload}
+            for m in catalog:
+                shard_engine = QueryEngine(
+                    catalog.load_shard(m.shard_id), gt_apply=gt,
+                    gt_flops_per_image=GT_FLOPS, batch_size=GT_BATCH)
+                shard_results, _ = shard_engine.query_many(workload)
+                for cls, res in zip(workload, shard_results):
+                    union[cls].append(res.frames)
+            for cls, res in zip(workload, cold_results):
+                want = (np.unique(np.concatenate(union[cls]))
+                        if union[cls] else np.array([], np.int64))
+                if not np.array_equal(res.frames, want):
+                    equals_union = False
+
+            per_shard_count.append({
+                "n_shards": n_shards,
+                "ingest_s": round(ingest_s, 3),
+                "cold_ms": round(cold_ms, 2),
+                "warm_ms": round(warm_ms, 2),
+                "cold_gt_invocations": cold.n_gt_invocations,
+                "cold_gt_batches": cold.n_gt_batches,
+                "warm_gt_invocations": warm.n_gt_invocations,
+                "unique_candidates": cold.n_unique_candidates,
+                "shard_loads_cold": cold.n_shard_loads,
+                "shard_evictions_cold": cold.n_shard_evictions,
+                "shard_loads_warm": warm.n_shard_loads,
+                "shard_evictions_warm": warm.n_shard_evictions,
+            })
+
+    record = {
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "n_objects": N_OBJECTS,
+        "n_queries": len(workload),
+        "lru_capacity": LRU_CAPACITY,
+        "per_shard_count": per_shard_count,
+        "archive_equals_union": bool(equals_union),
+        "single_gt_pass": bool(single_gt_pass),
+        "warm_gt_invocations": 0 if warm_zero else
+            max(r["warm_gt_invocations"] for r in per_shard_count),
+    }
+    append_trajectory(BENCH_PATH, record)
+    for r in per_shard_count:
+        emit(f"archive.query.{r['n_shards']}shards", r["cold_ms"] * 1e3,
+             f"warm_ms={r['warm_ms']}|gt={r['cold_gt_invocations']}"
+             f"|gt_batches={r['cold_gt_batches']}"
+             f"|evictions={r['shard_evictions_cold']}")
+    emit("archive.equivalence", 0.0,
+         f"union={equals_union}|one_pass={single_gt_pass}"
+         f"|warm_zero={warm_zero}")
+    assert equals_union, \
+        "archive answers diverge from the per-shard QueryEngine union"
+    assert single_gt_pass, \
+        "cold fan-out ran more GT launches than one unioned pass"
+    assert warm_zero, "warm archive query issued GT invocations"
+
+
+if __name__ == "__main__":
+    run()

@@ -12,6 +12,14 @@ from repro.core.engine import (  # noqa: F401
     EngineStats,
     QueryEngine,
 )
+from repro.core.archive import (  # noqa: F401
+    ArchiveBatchStats,
+    ArchiveQueryEngine,
+    ArchiveQueryResult,
+    ShardCatalog,
+    ShardLoader,
+    ShardMeta,
+)
 from repro.core.ingest import IngestConfig, IngestStats, ingest  # noqa: F401
 from repro.core.streaming import (  # noqa: F401
     IngestDelta,

@@ -25,12 +25,64 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.index import TopKIndex
 from repro.core.query import QueryResult, pad_to_bucket
+
+
+def grow_row_cache(vers: np.ndarray, labels: np.ndarray, n_rows: int,
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Grow a row-aligned (versions, labels) label cache to cover
+    ``n_rows`` store rows (amortized doubling; version -1 = no entry —
+    live rows always have version >= 1, so the sentinel is safe). Shared
+    by ``QueryEngine`` and the per-shard caches in ``core.archive``."""
+    if len(vers) < n_rows:
+        grown_v = np.full(max(n_rows, 2 * len(vers)), -1, np.int64)
+        grown_v[:len(vers)] = vers
+        grown_l = np.zeros(len(grown_v), np.int64)
+        grown_l[:len(labels)] = labels
+        vers, labels = grown_v, grown_l
+    return vers, labels
+
+
+def normalize_kx(Kx, n_queries: int) -> List[Optional[int]]:
+    """One Kx per query: broadcast a scalar/None, validate a sequence."""
+    if Kx is None or isinstance(Kx, (int, np.integer)):
+        return [Kx] * n_queries
+    if len(Kx) != n_queries:
+        raise ValueError("per-query Kx length mismatch")
+    return list(Kx)
+
+
+def probe_row_cache(vers: np.ndarray, cached: np.ndarray, rows: np.ndarray,
+                    versions: np.ndarray,
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized probe of a row-aligned label cache: one version-match
+    against the store's ``versions`` for the given rows. Returns
+    ``(hit mask, labels (stale at miss positions), miss positions)``.
+    Shared by ``QueryEngine.verify`` and both archive cache paths."""
+    hit = vers[rows] == versions
+    labels = cached[rows].copy()
+    return hit, labels, np.nonzero(~hit)[0]
+
+
+def classify_crops(gt_apply: Callable[[np.ndarray], np.ndarray],
+                   crops: np.ndarray, batch_size: int, batch_pad: int,
+                   ) -> Tuple[np.ndarray, int]:
+    """One bucket-padded GT-CNN pass over ``crops``, chunked only by
+    ``batch_size``; returns (labels, gt_apply launches)."""
+    out = np.empty(len(crops), np.int64)
+    n_batches = 0
+    for start in range(0, len(crops), batch_size):
+        chunk = crops[start:start + batch_size]
+        padded = pad_to_bucket(chunk, batch_pad)
+        out[start:start + len(chunk)] = \
+            np.asarray(gt_apply(padded))[:len(chunk)]
+        n_batches += 1
+    return out, n_batches
 
 
 @dataclass
@@ -79,21 +131,34 @@ class QueryEngine:
         self.batch_pad = batch_pad
         self.oracle_labels = (np.asarray(oracle_labels, np.int64)
                               if oracle_labels is not None else None)
-        self._cache: Dict[int, Tuple[int, int]] = {}  # cid -> (ver, label)
+        # row-aligned GT-label cache: the entry for a cluster lives at its
+        # store row (rows are append-only, so alignment is stable), keyed
+        # semantically by (cid, centroid version). version -1 = no entry;
+        # live rows always have version >= 1, so the sentinel is safe.
+        self._cache_vers = np.full(0, -1, np.int64)
+        self._cache_labels = np.zeros(0, np.int64)
         self.stats = EngineStats()
 
     # -- cache -----------------------------------------------------------------
 
     def __len__(self) -> int:
-        return len(self._cache)
+        return int((self._cache_vers >= 0).sum())
+
+    def _cache_arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Grow the row-aligned cache to cover every store row."""
+        self._cache_vers, self._cache_labels = grow_row_cache(
+            self._cache_vers, self._cache_labels, self.index.store.n_rows)
+        return self._cache_vers, self._cache_labels
 
     def cached_label(self, cid: int) -> Optional[int]:
-        """The cached GT verdict for ``cid`` if still valid, else None."""
-        ent = self._cache.get(int(cid))
-        if ent is None:
+        """The cached GT verdict for ``cid`` if still valid, else None
+        (also for cids the index has never seen)."""
+        row = self.index.store._cid_to_row.get(int(cid))
+        if row is None or row >= len(self._cache_vers):
             return None
-        row = self.index.store.row_of(int(cid))
-        return ent[1] if ent[0] == int(self.index.store.versions[row]) else None
+        if int(self._cache_vers[row]) != int(self.index.store.versions[row]):
+            return None
+        return int(self._cache_labels[row])
 
     def _classify_misses(self, rows: np.ndarray) -> np.ndarray:
         """GT-CNN labels for the store rows of uncached candidates."""
@@ -103,13 +168,9 @@ class QueryEngine:
         if s.rep_crops is None:
             raise ValueError("no representative crops were stored "
                              "(add_batch was called without crops)")
-        out = np.empty(len(rows), np.int64)
-        for start in range(0, len(rows), self.batch_size):
-            chunk = rows[start:start + self.batch_size]
-            padded = pad_to_bucket(s.rep_crops[chunk], self.batch_pad)
-            out[start:start + len(chunk)] = \
-                np.asarray(self.gt_apply(padded))[:len(chunk)]
-        return out
+        labels, _ = classify_crops(self.gt_apply, s.rep_crops[rows],
+                                   self.batch_size, self.batch_pad)
+        return labels
 
     def verify(self, cids: np.ndarray) -> Tuple[np.ndarray, int, List[int]]:
         """GT verdicts for ``cids`` (aligned), via the cache.
@@ -125,22 +186,19 @@ class QueryEngine:
         s = self.index.store
         rows = s.rows_of(cids)
         versions = s.versions[rows]
-        labels = np.empty(len(cids), np.int64)
-        miss: List[int] = []
-        for i, (cid, ver) in enumerate(zip(cids.tolist(), versions.tolist())):
-            ent = self._cache.get(cid)
-            if ent is not None and ent[0] == ver:
-                labels[i] = ent[1]
-            else:
-                miss.append(i)
+        vers, cached = self._cache_arrays()
+        # vectorized version-match: one compare against store.versions
+        # instead of a per-candidate Python probe (candidate unions are
+        # multiplied by shard fan-out in archive queries)
+        _, labels, miss = probe_row_cache(vers, cached, rows, versions)
         n_hits = len(cids) - len(miss)
-        if miss:
-            mi = np.asarray(miss, np.int64)
-            fresh = self._classify_misses(rows[mi])
-            labels[mi] = fresh
-            for i, lab in zip(miss, fresh.tolist()):
-                self._cache[int(cids[i])] = (int(versions[i]), int(lab))
-        return labels, n_hits, [int(cids[i]) for i in miss]
+        if len(miss):
+            mrows = rows[miss]
+            fresh = self._classify_misses(mrows)
+            labels[miss] = fresh
+            vers[mrows] = versions[miss]
+            cached[mrows] = fresh
+        return labels, n_hits, [int(c) for c in cids[miss]]
 
     def prefetch(self, cids) -> int:
         """Warm the GT-label cache for ``cids`` — typically a streaming
@@ -170,12 +228,7 @@ class QueryEngine:
         """
         t0 = time.perf_counter()
         classes = [int(c) for c in classes]
-        if Kx is None or isinstance(Kx, (int, np.integer)):
-            Kxs: List[Optional[int]] = [Kx] * len(classes)
-        else:
-            if len(Kx) != len(classes):
-                raise ValueError("per-query Kx length mismatch")
-            Kxs = list(Kx)
+        Kxs = normalize_kx(Kx, len(classes))
         cand = [np.asarray(self.index.lookup(c, k), np.int64)
                 for c, k in zip(classes, Kxs)]
         union = (np.unique(np.concatenate(cand)) if cand

@@ -368,6 +368,14 @@ class ClusterStore:
         sel = np.concatenate([order[indptr[r]:indptr[r + 1]] for r in rows])
         return np.unique(frames[sel]).astype(np.int64)
 
+    def frames_of_each(self, rows: np.ndarray) -> List[np.ndarray]:
+        """Per-row sorted unique frame ids (one array per row) — lets a
+        caller detach from the store before it knows which rows it will
+        keep (archive fan-out under an LRU-bounded loader)."""
+        order, indptr, _, frames = self._build_csr()
+        return [np.unique(frames[order[indptr[r]:indptr[r + 1]]]
+                          ).astype(np.int64) for r in rows]
+
 
 class _ViewCluster(Cluster):
     """Materialized snapshot handed out by ``index.clusters``; writes do not
@@ -511,18 +519,26 @@ class TopKIndex:
     def lookup(self, global_class: int, Kx: Optional[int] = None) -> List[int]:
         """Cluster ids whose top-Kx (local) classes include the queried
         class. ``Kx=None`` means the ingest-time K; ``Kx=0`` selects no
-        clusters; negative Kx is an error."""
+        clusters; negative Kx is an error, and so is ``Kx > K`` — rank
+        information beyond the ingest-time top-K was never stored, so
+        silently clamping would drop clusters whose class sits at rank
+        K..Kx-1 with no signal to the caller."""
         if self._ranks is None:
             self._build()
         if Kx is None:
             Kx = self.K
         elif Kx < 0:
             raise ValueError(f"Kx must be >= 0, got {Kx}")
+        elif Kx > self.K:
+            raise ValueError(
+                f"Kx={Kx} exceeds the ingest-time K={self.K}; ranks beyond "
+                f"the top-K were not stored at ingest (re-ingest with a "
+                f"larger K to query deeper)")
         local = (self.class_map.to_local(global_class)
                  if self.class_map is not None else global_class)
         if self._ranks.size == 0 or not 0 <= local < self._ranks.shape[1]:
             return []
-        rows = np.nonzero(self._ranks[:, local] < min(Kx, self.K))[0]
+        rows = np.nonzero(self._ranks[:, local] < Kx)[0]
         return self.store.row_cids[rows].tolist()
 
     def frames_of(self, cids: Sequence[int]) -> np.ndarray:

@@ -16,6 +16,13 @@ hit rates. The CNN batch size is scaled down to the chunk so every round
 publishes; the final index is identical to a one-shot run at that same
 batch size (chunking itself never changes the result — only the batch
 size does).
+
+With ``--archive DIR`` the ingest additionally rolls the live index over
+into time shards (``--shard-objects`` each) sealed under DIR, and the
+query workload is served through an ``ArchiveQueryEngine``: per-round
+queries fan out across every sealed shard plus the live one, with a
+single GT-CNN pass over the uncached candidates of all shards — warm
+rounds survive shard rollovers untouched.
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ import time
 
 import numpy as np
 
+from repro.core.archive import ArchiveQueryEngine, ShardCatalog
 from repro.core.engine import QueryEngine
 from repro.core.ingest import IngestConfig, ingest
 from repro.core.params import select, sweep
@@ -72,6 +80,42 @@ def _streaming_ingest(crops, frames, apply_fn, acc_flops, cfg, class_map,
     return index, stats, engine
 
 
+def _archive_ingest(crops, frames, apply_fn, acc_flops, cfg, class_map,
+                    workload, gt_apply, gt_flops, n_chunks, archive_dir,
+                    shard_objects, shard_cache):
+    """Feed the stream in chunks with shard rollover, serving the query
+    workload between chunks through an ``ArchiveQueryEngine`` that spans
+    the sealed shards and the live index. Returns (catalog, stats, engine).
+    """
+    catalog = ShardCatalog.open(archive_dir)
+    ing = StreamingIngestor(apply_fn, acc_flops, cfg, class_map=class_map,
+                            catalog=catalog, shard_objects=shard_objects)
+    engine = ArchiveQueryEngine(catalog, gt_apply=gt_apply,
+                                gt_flops_per_image=gt_flops,
+                                capacity=shard_cache, ingestor=ing)
+    bounds = np.linspace(0, len(crops), n_chunks + 1).astype(int)
+    for rnd, (lo, hi) in enumerate(zip(bounds, bounds[1:])):
+        t0 = time.perf_counter()
+        ing.feed(crops[lo:hi], frames[lo:hi])
+        feed_ms = (time.perf_counter() - t0) * 1e3
+        t1 = time.perf_counter()
+        delta = ing.flush()
+        fresh_gt = engine.prefetch(delta)
+        results, batch = engine.query_many(workload)
+        fresh_ms = (time.perf_counter() - t1) * 1e3
+        frames_seen = int(sum(len(r.frames) for r in results))
+        print(f"[serve] chunk {rnd}: +{hi - lo} objs in {feed_ms:.0f}ms | "
+              f"{len(delta.sealed_shards)} shards sealed "
+              f"({len(catalog)} total), {fresh_gt} prefetched GT | "
+              f"{batch.n_queries} queries over {batch.n_shards} shards "
+              f"({batch.n_cache_hits}/{batch.n_unique_candidates} cached, "
+              f"{batch.n_shard_loads} shard loads, {frames_seen} frames) | "
+              f"freshness {fresh_ms:.0f}ms")
+    ing.finish()
+    engine.prefetch(ing.flush())
+    return catalog, ing.stats, engine
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--stream", default="lausanne")
@@ -88,6 +132,14 @@ def main():
                     help="feed the stream in N chunks and serve the query "
                          "workload between chunks (query-while-ingest); "
                          "0 = one-shot ingest")
+    ap.add_argument("--archive", default=None, metavar="DIR",
+                    help="time-sharded archive mode: seal shards into DIR "
+                         "during ingest and serve queries through the "
+                         "cross-shard ArchiveQueryEngine")
+    ap.add_argument("--shard-objects", type=int, default=2048,
+                    help="archive mode: objects per sealed shard")
+    ap.add_argument("--shard-cache", type=int, default=4,
+                    help="archive mode: LRU capacity of resident shards")
     ap.add_argument("--index-out", default=None)
     args = ap.parse_args()
 
@@ -123,32 +175,51 @@ def main():
                        max_clusters=2048)
     t0 = time.perf_counter()
     engine = None
-    if args.stream_chunks > 0:
+    index = None
+    if args.archive or args.stream_chunks > 0:
         # freshness scales with the CNN batch cut: size batches to the
         # chunk so each round actually publishes (the partition is still a
         # function of the stream alone, not of the chunking)
         import dataclasses
-        chunk = max(1, -(-len(crops) // args.stream_chunks))
+        n_chunks = args.stream_chunks if args.stream_chunks > 0 else 8
+        chunk = max(1, -(-len(crops) // n_chunks))
         cfg = dataclasses.replace(cfg,
                                   batch_size=max(16, min(cfg.batch_size,
                                                          chunk)))
+    if args.archive:
+        catalog, stats, engine = _archive_ingest(
+            crops, frames, models[mid][0], models[mid][1], cfg, cmaps[mid],
+            workload, gtf_apply, GT_FLOPS, n_chunks, args.archive,
+            args.shard_objects, args.shard_cache)
+        print(f"[serve] archive: {len(catalog)} shards "
+              f"({sum(m.n_clusters for m in catalog)} clusters / "
+              f"{sum(m.n_objects for m in catalog)} objects) sealed under "
+              f"{args.archive} in {stats.wall_s:.1f}s "
+              f"(GPU-cost {gpu_seconds(stats.cheap_flops):.1f} GPU-s vs "
+              f"Ingest-all {gpu_seconds(len(crops)*GT_FLOPS):.1f} GPU-s)")
+    elif args.stream_chunks > 0:
         index, stats, engine = _streaming_ingest(
             crops, frames, models[mid][0], models[mid][1], cfg, cmaps[mid],
             workload, gtf_apply, GT_FLOPS, args.stream_chunks)
     else:
         index, stats = ingest(crops, frames, models[mid][0], models[mid][1],
                               cfg, class_map=cmaps[mid])
-    # streaming mode: elapsed time includes the interleaved query rounds,
-    # so report the ingestor's own accounted wall instead
-    ingest_s = (stats.wall_s if args.stream_chunks > 0
-                else time.perf_counter() - t0)
-    print(f"[serve] ingest: {index.n_clusters} clusters / "
-          f"{index.n_objects} objects in {ingest_s:.1f}s "
-          f"(GPU-cost {gpu_seconds(stats.cheap_flops):.1f} GPU-s vs "
-          f"Ingest-all {gpu_seconds(len(crops)*GT_FLOPS):.1f} GPU-s)")
+    if index is not None:
+        # streaming mode: elapsed time includes the interleaved query
+        # rounds, so report the ingestor's own accounted wall instead
+        ingest_s = (stats.wall_s if args.stream_chunks > 0
+                    else time.perf_counter() - t0)
+        print(f"[serve] ingest: {index.n_clusters} clusters / "
+              f"{index.n_objects} objects in {ingest_s:.1f}s "
+              f"(GPU-cost {gpu_seconds(stats.cheap_flops):.1f} GPU-s vs "
+              f"Ingest-all {gpu_seconds(len(crops)*GT_FLOPS):.1f} GPU-s)")
     if args.index_out:
-        index.save(args.index_out)
-        print(f"[serve] index persisted to {args.index_out}.(json|npz)")
+        if index is None:
+            print("[serve] --index-out ignored: archive shards are already "
+                  "persisted through the catalog")
+        else:
+            index.save(args.index_out)
+            print(f"[serve] index persisted to {args.index_out}.(json|npz)")
 
     # serve the dominant-class workload through the batched engine: one
     # union + one GT-CNN pass for the whole concurrent batch, centroid

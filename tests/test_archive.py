@@ -1,0 +1,375 @@
+"""Time-sharded archive: rollover invariant + cross-shard fan-out.
+
+Core properties (the safety net for every future archive refactor):
+
+* **Rollover invariant** — for random streams and random chunk splits,
+  every shard sealed by a rolling ``StreamingIngestor`` is byte-identical
+  on disk to a one-shot ``ingest()`` of exactly its window.
+* **Fan-out equivalence** — ``ArchiveQueryEngine`` answers equal the union
+  of per-shard ``QueryEngine`` answers, for any LRU capacity (including 1,
+  which forces a reload per shard per round).
+* **Warm across rollovers** — a long-lived archive engine fed
+  ``IngestDelta``s keeps answering with zero query-path GT invocations
+  while shards seal underneath it.
+"""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.archive import (ArchiveQueryEngine, ShardCatalog,
+                                ShardLoader)
+from repro.core.engine import QueryEngine
+from repro.core.ingest import IngestConfig, ingest
+from repro.core.streaming import StreamingIngestor
+
+FEAT_DIM = 12
+N_CLASSES = 5
+
+
+def _cheap(batch):
+    flat = batch.reshape(len(batch), -1)
+    feats = (flat[:, :FEAT_DIM] * 10.0).astype(np.float32)
+    probs = np.abs(flat[:, FEAT_DIM:FEAT_DIM + N_CLASSES]) + 1e-3
+    return (probs / probs.sum(1, keepdims=True)).astype(np.float32), feats
+
+
+def _gt_apply(batch):
+    return np.rint(batch[:, 0, 0, 2] * 8).astype(np.int64) % N_CLASSES
+
+
+def _stream(seed, n=400, dup_rate=0.35):
+    r = np.random.default_rng(seed)
+    n_frames = max(n // 5, 2)
+    modes = r.random((20, 6, 6, 3)).astype(np.float32)
+    pick = r.integers(0, 20, n)
+    crops = np.clip(modes[pick] + r.normal(0, 0.05, (n, 6, 6, 3)), 0, 1
+                    ).astype(np.float32)
+    frames = np.sort(r.integers(0, n_frames, n))
+    for i in range(1, n):
+        if frames[i] == frames[i - 1] + 1 and r.random() < dup_rate:
+            crops[i] = np.clip(
+                crops[i - 1] + r.normal(0, 1e-3, crops[i].shape), 0, 1
+            ).astype(np.float32)
+    return crops, frames
+
+
+def _chunks(rng_draw, n, max_chunks=8):
+    k = rng_draw(st.integers(1, max_chunks))
+    if k == 1 or n < 2:
+        return [n]
+    cuts = sorted({rng_draw(st.integers(1, n - 1)) for _ in range(k - 1)})
+    bounds = [0] + cuts + [n]
+    return [b - a for a, b in zip(bounds, bounds[1:])]
+
+
+def _file_bytes(prefix):
+    out = []
+    for ext in (".json", ".npz"):
+        with open(prefix + ext, "rb") as f:
+            out.append(f.read())
+    return tuple(out)
+
+
+def _windows(catalog, n_total):
+    """Per-shard [lo, hi) windows of the concatenated stream."""
+    bases = [m.obj_base for m in catalog] + [n_total]
+    return [(m, bases[i], bases[i + 1])
+            for i, m in enumerate(catalog)]
+
+
+CFG = IngestConfig(K=2, threshold=1.5, max_clusters=24, batch_size=32,
+                   high_water=0.8, evict_frac=0.5)
+
+
+# ---------------------------------------------------------------------------
+# the rollover + fan-out property
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(st.data())
+def test_rollover_shards_equal_oneshot_windows_and_union(data):
+    """Random stream, random chunk split, rollover mid-stream: every
+    sealed shard is byte-identical to a one-shot ingest of its window,
+    and archive answers equal the per-shard engine union — with an LRU
+    capacity of 1."""
+    seed = data.draw(st.integers(0, 10_000), label="seed")
+    n = data.draw(st.integers(1, 350), label="n")
+    shard_objects = data.draw(st.sampled_from([60, 110, 170]),
+                              label="shard_objects")
+    crops, frames = _stream(seed, n)
+    with tempfile.TemporaryDirectory() as d:
+        catalog = ShardCatalog.open(os.path.join(d, "arch"))
+        ing = StreamingIngestor(_cheap, 1e9, CFG, catalog=catalog,
+                                shard_objects=shard_objects)
+        rest_c, rest_f = crops, frames
+        for size in _chunks(data.draw, n):
+            ing.feed(rest_c[:size], rest_f[:size])
+            rest_c, rest_f = rest_c[size:], rest_f[size:]
+            ing.flush()                 # interleaved duplicate attaches
+        ing.finish()
+
+        assert len(catalog) == -(-n // shard_objects)
+        for m, lo, hi in _windows(catalog, n):
+            assert m.obj_base == lo and hi - lo <= shard_objects
+            one, _ = ingest(crops[lo:hi], frames[lo:hi], _cheap, 1e9, CFG)
+            p = os.path.join(d, "one")
+            one.save(p)
+            assert _file_bytes(os.path.join(catalog.root, m.path)) \
+                == _file_bytes(p), f"shard {m.shard_id} != window ingest"
+            assert m.n_objects == one.n_objects
+            assert m.n_clusters == one.n_clusters
+
+        archive = ArchiveQueryEngine(catalog, gt_apply=_gt_apply,
+                                     gt_flops_per_image=1e9, capacity=1)
+        results, batch = archive.query_many(list(range(N_CLASSES)))
+        for cls, res in zip(range(N_CLASSES), results):
+            parts, matched = [], []
+            for m in catalog:
+                shard_engine = QueryEngine(catalog.load_shard(m.shard_id),
+                                           gt_apply=_gt_apply)
+                r = shard_engine.query(cls)
+                parts.append(r.frames)
+                matched.extend((m.shard_id, c) for c in r.matched_clusters)
+            want = (np.unique(np.concatenate(parts)) if parts
+                    else np.array([], np.int64))
+            np.testing.assert_array_equal(res.frames, want)
+            assert res.matched == matched
+        if len(catalog) > 1:
+            assert batch.n_shard_evictions > 0     # capacity 1 really binds
+        # warm round: same answers, zero GT
+        warm_results, warm = archive.query_many(list(range(N_CLASSES)))
+        assert warm.n_gt_invocations == 0
+        for a, b in zip(results, warm_results):
+            np.testing.assert_array_equal(a.frames, b.frames)
+
+
+def test_rollover_unsorted_chunk_keeps_arrival_order_ids():
+    """Default ids under rollover are arrival ranks, so shards sealed
+    from an internally-unsorted chunk still match a one-shot ingest of
+    their window (the window's objects in arrival order) — and oracle
+    labels stay aligned."""
+    r = np.random.default_rng(31)
+    crops, frames = _stream(31, 100)
+    perm = r.permutation(100)
+    crops, frames = crops[perm], frames[perm]     # internally unsorted
+    order = np.argsort(frames, kind="stable")
+    with tempfile.TemporaryDirectory() as d:
+        catalog = ShardCatalog.open(d)
+        ing = StreamingIngestor(_cheap, 1e9, CFG, catalog=catalog,
+                                shard_objects=60)
+        ing.feed(crops, frames)
+        ing.finish()
+        assert len(catalog) == 2
+        for m, lo, hi in _windows(catalog, 100):
+            sel = np.sort(order[lo:hi])           # window in arrival order
+            one, _ = ingest(crops[sel], frames[sel], _cheap, 1e9, CFG)
+            p = os.path.join(d, "one")
+            one.save(p)
+            assert _file_bytes(catalog.path_of(m.shard_id)) \
+                == _file_bytes(p), f"shard {m.shard_id}"
+        # the global id line = per-window arrival-order concatenation
+        sel_all = np.concatenate([np.sort(order[lo:hi])
+                                  for _, lo, hi in _windows(catalog, 100)])
+        labels = _gt_apply(crops[sel_all])
+        oracle = ArchiveQueryEngine(catalog, oracle_labels=labels)
+        via_gt = ArchiveQueryEngine(catalog, gt_apply=_gt_apply)
+        a, _ = oracle.query_many(list(range(N_CLASSES)))
+        b, _ = via_gt.query_many(list(range(N_CLASSES)))
+        for ra, rb in zip(a, b):
+            np.testing.assert_array_equal(ra.frames, rb.frames)
+            assert ra.matched == rb.matched
+
+
+def test_frame_window_rollover_seals_on_absolute_boundaries():
+    """shard_frames=W seals at absolute [i*W, (i+1)*W) windows regardless
+    of chunking, and the shard files still match one-shot ingests."""
+    crops, frames = _stream(11, 300)
+    W = 20
+    with tempfile.TemporaryDirectory() as d:
+        catalog = ShardCatalog.open(d)
+        ing = StreamingIngestor(_cheap, 1e9, CFG, catalog=catalog,
+                                shard_frames=W)
+        for lo in range(0, len(crops), 77):
+            ing.feed(crops[lo:lo + 77], frames[lo:lo + 77])
+        ing.finish()
+        assert len(catalog) >= 2
+        for m, lo, hi in _windows(catalog, len(crops)):
+            assert m.frame_lo // W == m.frame_hi // W       # one window
+            np.testing.assert_array_equal(frames[lo:hi] // W,
+                                          m.frame_lo // W)
+            one, _ = ingest(crops[lo:hi], frames[lo:hi], _cheap, 1e9, CFG)
+            p = os.path.join(d, "one")
+            one.save(p)
+            assert _file_bytes(catalog.path_of(m.shard_id)) \
+                == _file_bytes(p)
+
+
+def test_query_while_ingest_warm_across_rollovers():
+    """A long-lived archive engine prefetching each flush delta answers
+    like a cold engine on the same state, with zero query-path GT."""
+    crops, frames = _stream(3, 500)
+    cfg = IngestConfig(K=3, threshold=1.5, max_clusters=48, batch_size=48,
+                       high_water=0.85, evict_frac=0.4)
+    with tempfile.TemporaryDirectory() as d:
+        catalog = ShardCatalog.open(d)
+        ing = StreamingIngestor(_cheap, 1e9, cfg,
+                                n_local_classes=N_CLASSES,
+                                catalog=catalog, shard_objects=160)
+        warm = ArchiveQueryEngine(catalog, gt_apply=_gt_apply,
+                                  gt_flops_per_image=1e9, capacity=2,
+                                  ingestor=ing)
+        workload = list(range(N_CLASSES))
+        sealed_seen = 0
+        for start in range(0, len(crops), 130):
+            ing.feed(crops[start:start + 130], frames[start:start + 130])
+            delta = ing.flush()
+            sealed_seen += len(delta.sealed_shards)
+            warm.prefetch(delta)
+            results, batch = warm.query_many(workload)
+            assert batch.n_gt_invocations == 0   # prefetch took the cost
+            cold = ArchiveQueryEngine(catalog, gt_apply=_gt_apply,
+                                      gt_flops_per_image=1e9, capacity=2,
+                                      ingestor=ing)
+            cold_results, _ = cold.query_many(workload)
+            for a, b in zip(results, cold_results):
+                np.testing.assert_array_equal(a.frames, b.frames)
+                assert a.matched == b.matched
+        ing.finish()
+        warm.prefetch(ing.flush())
+        final, fb = warm.query_many(workload)
+        assert fb.n_gt_invocations == 0
+        assert sealed_seen + len(ing.flush().sealed_shards) \
+            <= len(catalog) == 4
+
+
+# ---------------------------------------------------------------------------
+# catalog / loader plumbing
+# ---------------------------------------------------------------------------
+
+def _tiny_archive(d, n=180, shard_objects=70):
+    crops, frames = _stream(17, n)
+    catalog = ShardCatalog.open(d)
+    ing = StreamingIngestor(_cheap, 1e9, CFG, catalog=catalog,
+                            shard_objects=shard_objects)
+    ing.feed(crops, frames)
+    ing.finish()
+    return catalog
+
+
+def test_resumed_catalog_continues_obj_base_and_frame_line(tmp_path):
+    """A new ingestor on a non-empty catalog must continue the global
+    object-id line and the non-decreasing frame contract where the
+    archive ends — not restart obj_base at 0 (which would alias oracle
+    labels across runs)."""
+    crops, frames = _stream(29, 160)
+    catalog = _tiny_archive(str(tmp_path), n=160, shard_objects=70)
+    n_first = sum(m.n_objects for m in catalog)
+    resumed = ShardCatalog.open(str(tmp_path))
+    ing = StreamingIngestor(_cheap, 1e9, CFG, catalog=resumed,
+                            shard_objects=70)
+    assert ing.shard_obj_base == n_first
+    with pytest.raises(ValueError):        # frames behind the archive end
+        ing.feed(crops[:4], np.zeros(4, np.int64))
+    ing.feed(crops, frames + catalog.shards[-1].frame_hi)
+    ing.finish()
+    bases = [m.obj_base for m in resumed]
+    assert bases == sorted(set(bases))     # strictly increasing, no alias
+    assert bases[len(catalog.shards) - 1] + \
+        catalog.shards[-1].n_objects == bases[len(catalog.shards)]
+
+
+def test_catalog_roundtrips_through_json(tmp_path):
+    catalog = _tiny_archive(str(tmp_path))
+    reopened = ShardCatalog.open(str(tmp_path))
+    assert reopened.shards == catalog.shards
+    assert reopened.next_shard_id() == len(catalog)
+    idx = reopened.load_shard(0)
+    assert idx.n_clusters == catalog.shards[0].n_clusters
+
+
+def test_shard_loader_lru_counts_hits_loads_evictions(tmp_path):
+    catalog = _tiny_archive(str(tmp_path))           # 3 shards
+    loader = ShardLoader(catalog, capacity=1)
+    loader.get(0)
+    loader.get(0)
+    assert (loader.n_loads, loader.n_hits, loader.n_evictions) == (1, 1, 0)
+    loader.get(1)
+    assert loader.n_evictions == 1 and len(loader) == 1
+    loader.get(0)                                    # reload after eviction
+    assert loader.n_loads == 3
+    with pytest.raises(ValueError):
+        ShardLoader(catalog, capacity=0)
+    with pytest.raises(KeyError):
+        loader.get(99)
+
+
+def test_rollover_requires_catalog_and_self_drive():
+    with pytest.raises(ValueError):
+        StreamingIngestor(_cheap, 1e9, CFG, shard_objects=10)
+    with pytest.raises(ValueError):
+        StreamingIngestor(None, 1e9, CFG,
+                          catalog=ShardCatalog("unused"), shard_objects=10)
+    with pytest.raises(ValueError):
+        StreamingIngestor(_cheap, 1e9, CFG,
+                          catalog=ShardCatalog("unused"), shard_objects=0)
+
+
+def test_archive_engine_requires_exactly_one_labeler(tmp_path):
+    catalog = _tiny_archive(str(tmp_path))
+    with pytest.raises(ValueError):
+        ArchiveQueryEngine(catalog)
+    with pytest.raises(ValueError):
+        ArchiveQueryEngine(catalog, gt_apply=_gt_apply,
+                           oracle_labels=np.zeros(10, np.int64))
+
+
+def test_archive_cached_label_is_read_only_probe(tmp_path):
+    """cached_label validates against the live index or a resident shard
+    and returns None otherwise — never pulling a cold shard through the
+    LRU (a probe must not evict a hot shard)."""
+    catalog = _tiny_archive(str(tmp_path))               # 3 shards
+    engine = ArchiveQueryEngine(catalog, gt_apply=_gt_apply, capacity=1)
+    for m in catalog:
+        assert engine.cached_label(m.shard_id, 0) is None   # cold cache
+    results, _ = engine.query_many(list(range(N_CLASSES)))
+    assert engine.loader.n_loads == 3
+    resident = next(iter(engine.loader._lru))            # only one resident
+    sid, cid = next((s, c) for r in results for s, c in r.matched
+                    if s == resident)
+    assert engine.cached_label(sid, cid) == _gt_apply(
+        catalog.load_shard(sid).rep_crops([cid]))[0]
+    loads = engine.loader.n_loads
+    for m in catalog:
+        if m.shard_id != resident:
+            engine.cached_label(m.shard_id, 0)           # non-resident
+    assert engine.loader.n_loads == loads                # no disk pulls
+    assert engine.cached_label(resident, 10**9) is None  # unknown cid
+
+
+def test_oracle_mode_uses_obj_base_offsets(tmp_path):
+    """Shard-local first-member ids + obj_base address the global
+    oracle-label array correctly."""
+    crops, frames = _stream(23, 220)
+    labels = _gt_apply(crops)
+    catalog = ShardCatalog.open(str(tmp_path))
+    ing = StreamingIngestor(_cheap, 1e9, CFG, catalog=catalog,
+                            shard_objects=90)
+    ing.feed(crops, frames)
+    ing.finish()
+    oracle = ArchiveQueryEngine(catalog, oracle_labels=labels, capacity=2)
+    via_gt = ArchiveQueryEngine(catalog, gt_apply=_gt_apply, capacity=2)
+    a, batch_a = oracle.query_many(list(range(N_CLASSES)))
+    b, batch_b = via_gt.query_many(list(range(N_CLASSES)))
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra.frames, rb.frames)
+        assert ra.matched == rb.matched
+    # per-query fresh-verdict attribution sums to the batch total in both
+    # labeler modes
+    for results, batch in ((a, batch_a), (b, batch_b)):
+        assert batch.n_gt_invocations > 0
+        assert sum(r.n_gt_invocations for r in results) \
+            == batch.n_gt_invocations

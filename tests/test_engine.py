@@ -182,6 +182,37 @@ def test_lookup_negative_kx_raises():
         query(index, 0, _gt_apply, GT_FLOPS, Kx=-3)
 
 
+def test_lookup_kx_above_k_raises():
+    """Regression: ``Kx > K`` used to be silently clamped to K, returning
+    an empty/short candidate list with no signal even when the class sat
+    at a rank between K and Kx. Rank info beyond K was never stored, so
+    the only honest answer is an error."""
+    index = _mk_index(9, K=2)
+    with pytest.raises(ValueError, match="exceeds the ingest-time K"):
+        index.lookup(0, Kx=4)
+    engine = QueryEngine(index, gt_apply=_gt_apply)
+    with pytest.raises(ValueError, match="exceeds the ingest-time K"):
+        engine.query_many([0, 1], Kx=4)
+    with pytest.raises(ValueError, match="exceeds the ingest-time K"):
+        query(index, 0, _gt_apply, GT_FLOPS, Kx=3)
+    # the boundary itself is fine
+    assert index.lookup(0, Kx=2) == index.lookup(0)
+
+
+def test_cached_label_unknown_cid_returns_none():
+    """Regression: probing the cache for a cid the index has never seen
+    must return None, not raise through the cid->row map."""
+    index = _mk_index(10)
+    engine = QueryEngine(index, gt_apply=_gt_apply,
+                         gt_flops_per_image=GT_FLOPS)
+    assert engine.cached_label(123456) is None     # before any query
+    engine.query_many(list(range(8)))
+    assert engine.cached_label(123456) is None     # and after
+    known = int(index.store.row_cids[0])
+    assert engine.cached_label(known) == _gt_apply(
+        index.store.rep_crops[0][None])[0]
+
+
 # ---------------------------------------------------------------------------
 # incremental rank maintenance
 # ---------------------------------------------------------------------------

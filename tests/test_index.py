@@ -30,6 +30,8 @@ def test_lookup_respects_Kx():
     assert idx.lookup(3, Kx=2) == [0]
     assert idx.lookup(0, Kx=3) == [0]
     assert idx.lookup(2, Kx=3) == []          # rank 3 cut by K=3
+    with pytest.raises(ValueError):
+        idx.lookup(1, Kx=4)                   # beyond-K ranks never stored
 
 
 def test_frames_union_sorted_unique():

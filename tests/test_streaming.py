@@ -241,6 +241,34 @@ def test_feed_rejects_decreasing_frames_across_chunks():
         ing.feed(crops, np.array([3, 3, 4, 4]))
 
 
+def test_rejected_feed_leaves_state_unchanged():
+    """Regression: ``feed`` used to bump ``_n_seen`` / ``stats.n_objects``
+    *before* the non-decreasing-frame check raised, so a rejected chunk
+    permanently corrupted stats and shifted every later default object id
+    (silently changing clustering results). Validation must precede any
+    mutation."""
+    cfg = IngestConfig(K=2, threshold=1.5, max_clusters=24, batch_size=32)
+    crops, frames = _stream(1, 120)
+    ing = StreamingIngestor(_cheap, 1e9, cfg)
+    half = len(crops) // 2
+    ing.feed(crops[:half], frames[:half])
+    snap = (ing.stats.n_objects, ing.stats.n_pixel_dedup, ing._n_seen,
+            ing._obj_next, ing.n_pending_unique, ing.n_pending_dups,
+            ing._max_frame)
+    bad = np.random.default_rng(9).random((4, 6, 6, 3)).astype(np.float32)
+    with pytest.raises(ValueError):
+        ing.feed(bad, np.zeros(4, np.int64))       # out of order: rejected
+    assert (ing.stats.n_objects, ing.stats.n_pixel_dedup, ing._n_seen,
+            ing._obj_next, ing.n_pending_unique, ing.n_pending_dups,
+            ing._max_frame) == snap
+    # object-id assignment is unaffected: finishing equals a run that
+    # never saw the rejected chunk, byte for byte
+    ing.feed(crops[half:], frames[half:])
+    chunk_index, _ = ing.finish()
+    one_index, _ = ingest(crops, frames, _cheap, 1e9, cfg)
+    assert _save_bytes(chunk_index, "r") == _save_bytes(one_index, "o")
+
+
 def test_feed_rejects_decreasing_frames_without_pixel_diff():
     """The contract is enforced even when pixel differencing is off — an
     out-of-order chunk would silently move the CNN batch partition away
@@ -251,6 +279,22 @@ def test_feed_rejects_decreasing_frames_without_pixel_diff():
     ing.feed(crops, np.array([5, 5, 6, 7]))
     with pytest.raises(ValueError):
         ing.feed(crops, np.array([3, 3, 4, 4]))
+
+
+def test_default_obj_ids_are_arrival_positions_in_unsorted_chunk():
+    """Default object ids are arrival positions in the fed chunk, not
+    positions after the internal frame-sort — oracle labels are aligned
+    to arrival order."""
+    cfg = IngestConfig(K=2, threshold=1.5, max_clusters=16, batch_size=4,
+                       pixel_diff=False)
+    ing = StreamingIngestor(_cheap, 1e9, cfg)
+    crops = np.random.default_rng(0).random((6, 6, 6, 3)).astype(np.float32)
+    ing.feed(crops, np.array([2, 0, 1, 2, 0, 1]))
+    index, _ = ing.finish()
+    s = index.store
+    pairs = set(zip(s._m_objs[:s.m_n].tolist(),
+                    s._m_frames[:s.m_n].tolist()))
+    assert pairs == {(1, 0), (4, 0), (2, 1), (5, 1), (0, 2), (3, 2)}
 
 
 def test_feed_after_finish_raises():
