@@ -1,11 +1,17 @@
-"""End-to-end ingest driver throughput (objects/sec).
+"""Ingest throughput: driver-only (clustering variants) and end-to-end.
 
-Measures the full ``ingest()`` hot path — clustering, slot -> cid
-bookkeeping, SoA ClusterStore updates, eviction — with a precomputed
-cheap-CNN stub, isolating the driver from CNN compute exactly as the paper
-pipelines clustering (CPU) behind the CNN (GPU) in §6.3. One record per
-clustering variant is appended to the BENCH_ingest.json trajectory so
-future perf PRs are measured against this one.
+Two sections, one BENCH_ingest.json record:
+
+* ``variants`` — the ``ingest()`` driver hot path (clustering, slot ->
+  cid bookkeeping, SoA ClusterStore updates, eviction) with a precomputed
+  cheap-CNN stub, isolating the driver from CNN compute exactly as the
+  paper pipelines clustering (CPU) behind the CNN (GPU) in §6.3.
+* ``e2e`` — crops in -> index rows out with a REAL cheap CNN, comparing
+  the host-staged path (jitted forward, numpy round-trips between CNN /
+  top-K / clustering) against the fused ``IngestPipeline`` megastep
+  (DESIGN.md §9). Reports objects/sec for both, the fused path's device
+  dispatches per batch, its compile-cache hit/miss counts, and whether
+  the two paths saved byte-identical indexes — all gated in CI.
 """
 from __future__ import annotations
 
@@ -25,6 +31,11 @@ FEAT_DIM = 128
 N_CLASSES = 32
 N_MODES = 120
 MAX_CLUSTERS = 1024
+
+E2E_OBJECTS = 2048
+E2E_RES = 16
+E2E_BATCH = 256
+E2E_REPS = 9
 
 
 def _synthetic_stream(seed: int = 0):
@@ -77,7 +88,129 @@ def run():
         }
         emit(f"ingest.{variant}.{N_OBJECTS}x{FEAT_DIM}", wall * 1e6,
              f"objs_per_s={objs_per_s:.0f}|n_clusters={index.n_clusters}")
+    record["e2e"] = run_e2e()
     append_trajectory(BENCH_PATH, record)
+
+
+def _e2e_stream(seed: int = 1):
+    """Video-shaped crop stream at full CNN input resolution."""
+    r = np.random.default_rng(seed)
+    modes = r.random((N_MODES, E2E_RES, E2E_RES, 3)).astype(np.float32)
+    pick = r.integers(0, N_MODES, E2E_OBJECTS)
+    crops = np.clip(modes[pick]
+                    + r.normal(0, 0.03, (E2E_OBJECTS, E2E_RES, E2E_RES, 3)),
+                    0, 1).astype(np.float32)
+    frames = np.repeat(np.arange(E2E_OBJECTS // 8), 8)[:E2E_OBJECTS]
+    return crops, frames
+
+
+def run_e2e() -> dict:
+    """Crops -> index rows, host-staged vs fused-megastep pipeline.
+
+    Both paths produce the same artifacts: the saved index AND the
+    per-object top-K classes (the staged path runs the top-K kernel as
+    its own dispatch with a host round-trip, exactly the staging the
+    megastep removes). Gated timings are the median over ``E2E_REPS``
+    interleaved runs — wall noise in this container swamps a single
+    measurement, and a min is hostage to one lucky rep of either path
+    (``best_speedup`` reports the min-based ratio for reference).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.common.config import CheapCNNConfig
+    from repro.core.pipeline import IngestPipeline, staged_cheap_apply
+    from repro.core.streaming import StreamingIngestor
+    from repro.kernels import ops as kops
+    from repro.models import cnn
+
+    cnn_cfg = CheapCNNConfig("bench_e2e", input_res=E2E_RES, n_blocks=3,
+                             width=24, n_classes=32, feature_dim=FEAT_DIM)
+    params = cnn.init(jax.random.PRNGKey(0), cnn_cfg)
+
+    def cheap_fn(crops):
+        logits, feats = cnn.forward(params, crops, cnn_cfg)
+        return jax.nn.softmax(logits, axis=-1), feats
+
+    cfg = IngestConfig(K=4, threshold=1.0, max_clusters=MAX_CLUSTERS,
+                       batch_size=E2E_BATCH, pixel_diff=False)
+    flops = float(cnn.flops_per_image(cnn_cfg))
+    crops, frames = _e2e_stream()
+
+    def run_staged():
+        base = staged_cheap_apply(cheap_fn, cfg)
+        topk_out = []
+
+        def apply(batch):
+            probs, feats = base(batch)
+            vals, idxs = kops.topk(jnp.asarray(probs), cfg.K)
+            topk_out.append((np.asarray(vals), np.asarray(idxs)))
+            return probs, feats
+
+        ing = StreamingIngestor(apply, flops, cfg)
+        for s in range(0, len(crops), 4 * E2E_BATCH):
+            ing.feed(crops[s:s + 4 * E2E_BATCH],
+                     frames[s:s + 4 * E2E_BATCH])
+        return ing.finish()[0], None
+
+    def run_pipeline():
+        topk_out = []
+        pipe = IngestPipeline(
+            cheap_fn, cfg,
+            topk_sink=lambda objs, vals, idxs: topk_out.append((vals, idxs)))
+        ing = StreamingIngestor(None, flops, cfg, pipeline=pipe)
+        for s in range(0, len(crops), 4 * E2E_BATCH):
+            ing.feed(crops[s:s + 4 * E2E_BATCH],
+                     frames[s:s + 4 * E2E_BATCH])
+        return ing.finish()[0], pipe
+
+    # warmup (compiles both paths' executables), then interleaved timing
+    staged_index, _ = run_staged()
+    pipe_index, _ = run_pipeline()
+    identical = staged_index.save_bytes() == pipe_index.save_bytes()
+    walls = {"staged": [], "pipeline": []}
+    pipe = None
+    for _ in range(E2E_REPS):
+        for name, fn in (("staged", run_staged), ("pipeline", run_pipeline)):
+            t0 = time.perf_counter()
+            _, p = fn()
+            walls[name].append(time.perf_counter() - t0)
+            if p is not None:
+                pipe = p
+    # median over interleaved reps: robust to the one-off wall-clock
+    # spikes this container produces (a min is hostage to a single lucky
+    # rep of either path)
+    staged_ops = E2E_OBJECTS / float(np.median(walls["staged"]))
+    pipe_ops = E2E_OBJECTS / float(np.median(walls["pipeline"]))
+    result = {
+        "n_objects": E2E_OBJECTS,
+        "input_res": E2E_RES,
+        "staged_objs_per_sec": round(staged_ops, 1),
+        "pipeline_objs_per_sec": round(pipe_ops, 1),
+        "speedup": round(pipe_ops / staged_ops, 3),
+        "best_speedup": round(min(walls["staged"]) / min(walls["pipeline"]),
+                              3),
+        "dispatches_per_batch": round(pipe.stats.dispatches_per_batch, 3),
+        "compile_misses": pipe.stats.compile_misses,
+        "compile_hits": pipe.stats.compile_hits,
+        "tail_compile_misses": pipe.stats.tail_compile_misses,
+        "tail_compile_hits": pipe.stats.tail_compile_hits,
+        # real XLA trace-cache entries across the whole bench process —
+        # a retrace (shape/dtype/weak-type drift) shows up here even when
+        # the (bucket, res) key counters stay clean
+        "megastep_jit_entries": pipe.jit_cache_entries()["megastep"],
+        "tail_jit_entries": pipe.jit_cache_entries()["tail"],
+        "identical": identical,
+    }
+    emit(f"ingest.e2e.staged.{E2E_OBJECTS}x{E2E_RES}px",
+         float(np.median(walls["staged"])) * 1e6,
+         f"objs_per_s={staged_ops:.0f}")
+    emit(f"ingest.e2e.pipeline.{E2E_OBJECTS}x{E2E_RES}px",
+         float(np.median(walls["pipeline"])) * 1e6,
+         f"objs_per_s={pipe_ops:.0f}|speedup={pipe_ops / staged_ops:.2f}"
+         f"|dispatches_per_batch={pipe.stats.dispatches_per_batch:.2f}"
+         f"|identical={identical}")
+    return result
 
 
 if __name__ == "__main__":

@@ -21,6 +21,12 @@ from repro.core.archive import (  # noqa: F401
     ShardMeta,
 )
 from repro.core.ingest import IngestConfig, IngestStats, ingest  # noqa: F401
+from repro.core.pipeline import (  # noqa: F401
+    IngestPipeline,
+    PipelineStats,
+    batch_bucket,
+    staged_cheap_apply,
+)
 from repro.core.streaming import (  # noqa: F401
     IngestDelta,
     MultiStreamRunner,

@@ -627,6 +627,23 @@ class TopKIndex:
         with open(path + ".json", "w") as f:
             json.dump(meta, f)
 
+    def save_bytes(self) -> tuple:
+        """(meta json bytes, npz bytes) of this index as ``save`` writes
+        them — THE byte-identity comparison unit pinned by the streaming /
+        pipeline equivalence harnesses and the ingest bench gate. One
+        implementation, so a save-format change cannot silently diverge
+        what the different harnesses compare."""
+        import os
+        import tempfile
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "idx")
+            self.save(path)
+            with open(path + ".json", "rb") as f:
+                meta = f.read()
+            with open(path + ".npz", "rb") as f:
+                npz = f.read()
+        return meta, npz
+
     def _load_columnar(self, arrays: Mapping):
         s = self.store
         cids = np.asarray(arrays["row_cids"], np.int64)

@@ -80,7 +80,7 @@ def ingest(crops: np.ndarray, frames: np.ndarray,
            cheap_flops_per_image: float, cfg: IngestConfig,
            class_map: Optional[ClassMap] = None,
            n_local_classes: Optional[int] = None,
-           ) -> Tuple[TopKIndex, IngestStats]:
+           pipeline=None) -> Tuple[TopKIndex, IngestStats]:
     """Build the top-K index for a stream of detected objects — the
     one-shot (single-chunk) wrapper over ``streaming.StreamingIngestor``.
 
@@ -91,10 +91,15 @@ def ingest(crops: np.ndarray, frames: np.ndarray,
     streams — every stream here — that is exactly the array order the
     pre-streaming implementation used, and a chunked ``StreamingIngestor``
     run over the same stream saves a byte-identical index.
+
+    With ``pipeline`` (a ``core.pipeline.IngestPipeline``) the CNN +
+    clustering fast path runs as the fused device megastep instead of
+    host-staged ``cheap_apply`` calls; pass ``cheap_apply=None`` then.
     """
     from repro.core.streaming import StreamingIngestor
     ing = StreamingIngestor(cheap_apply, cheap_flops_per_image, cfg,
                             class_map=class_map,
-                            n_local_classes=n_local_classes)
+                            n_local_classes=n_local_classes,
+                            pipeline=pipeline)
     ing.feed(np.asarray(crops), np.asarray(frames, np.int64))
     return ing.finish()

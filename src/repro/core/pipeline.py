@@ -1,0 +1,451 @@
+"""Device-resident fused ingest megastep (DESIGN.md §9).
+
+The staged ingest hot path runs cheap-CNN forward, top-K, and clustering
+as separate host-driven stages with numpy round-trips between them.
+``IngestPipeline`` fuses the whole per-batch fast path into ONE jitted
+dispatch::
+
+    crops ──► cheap-CNN forward ──► probs ──► Pallas topk ──► (vals, idxs)
+                     │
+                     └► feats ──► fused-threshold centroid_assign (phase 1)
+                                         │
+                                         └► matched-fold segment-sum
+                                            (ClusterState update, donated)
+
+Only the small per-batch outputs come back to the host: the assignment
+vector ``j``/``matched`` (for slot → cid bookkeeping and the unmatched
+tail), the top-K values/indices, and — lazily — ``probs``/``feats`` rows
+for the SoA index fold. The sequential tail over *unmatched* rows (new
+clusters within a batch) is the only other device dispatch, so the fused
+path issues at most 2 dispatches per batch (gated in CI).
+
+Double buffering: ``submit`` dispatches batch N+1's megastep *before*
+host-folding batch N's rows into the ``TopKIndex`` — JAX async dispatch
+lets the accelerator chew on N+1 while the host does numpy bookkeeping
+for N. The clustering state stays device-resident across batches; the
+host only syncs on ``state.n`` when an upper bound (live clusters +
+cumulative unmatched rows) says eviction *might* be due, which keeps the
+common batch entirely sync-free between the tiny ``j``/``matched``
+fetches.
+
+Numerics contract (pinned by ``tests/test_pipeline.py``): a pipeline-
+driven ``StreamingIngestor`` saves a byte-identical index (and identical
+``IngestStats`` counters) to the host-staged path over the same stream,
+chunking, eviction, and shard-rollover boundaries. The megastep inlines
+the *same* jitted sub-computations the staged path runs (``forward``,
+``_phase1``, ``_fold_matched``, ``_scan_unmatched``), so per-row values
+agree bit-for-bit.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clustering as C
+from repro.kernels import ops as kops
+
+
+def batch_bucket(n: int, batch_size: int) -> int:
+    """Compile-cache bucket for a batch of ``n`` crops.
+
+    Full driver batches (``n >= batch_size`` — ``StreamingIngestor``
+    ready batches are exactly ``batch_size``) map to themselves; ragged
+    tail batches round up to the next power of two (min 8, capped at
+    ``batch_size``), so every tail size in a bucket reuses one compiled
+    executable instead of retracing per size.
+    """
+    if n >= batch_size:
+        return n
+    return min(C._pad_bucket(n), batch_size)
+
+
+def _pad_rows(arr: np.ndarray, bucket: int) -> np.ndarray:
+    n = len(arr)
+    if n == bucket:
+        return arr
+    return np.concatenate(
+        [arr, np.zeros((bucket - n,) + arr.shape[1:], arr.dtype)])
+
+
+def _donate_argnums() -> tuple:
+    """Donate the ClusterState buffers (centroids, counts, n) so the fold
+    updates them in place. CPU XLA cannot alias donated buffers (it would
+    only warn), so donation is enabled off-CPU only."""
+    return () if jax.default_backend() == "cpu" else (0, 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# jitted steps (module-cached so every pipeline over the same cheap_fn
+# shares compiled executables)
+# ---------------------------------------------------------------------------
+
+# bounded LRU: shares compiled executables between pipelines over the
+# same cheap_fn without pinning every model's params (each key holds the
+# cheap_fn closure, i.e. its full parameter tree) for process lifetime
+_MEGASTEP_JITS: "OrderedDict[Tuple, Callable]" = OrderedDict()
+_MEGASTEP_JITS_MAX = 16
+_SCAN_TAIL_JIT: Optional[Callable] = None
+
+
+def _megastep_jit(cheap_fn: Callable, k_top: int,
+                  with_topk: bool) -> Callable:
+    """The fused megastep for one traceable ``cheap_fn``: forward →
+    [topk →] phase-1 assign → matched fold, one XLA computation.
+    ``n_real`` masks bucket-padding rows out of the fold (their phase-1
+    outputs are sliced away host-side), so padded tail batches fold
+    exactly like unpadded ones. The top-K branch is compiled in only when
+    a sink consumes it — without one the (bucket, K) outputs would be
+    computed and materialized per batch for nobody (jit outputs cannot be
+    dead-code-eliminated)."""
+    key = (cheap_fn, k_top, with_topk)
+    fn = _MEGASTEP_JITS.get(key)
+    if fn is not None:
+        _MEGASTEP_JITS.move_to_end(key)
+        return fn
+
+    def megastep(centroids, counts, n, threshold, n_real, crops):
+        probs, feats = cheap_fn(crops)
+        probs = probs.astype(jnp.float32)
+        feats = feats.astype(jnp.float32)
+        if with_topk:
+            vals, idxs = kops.topk(probs, min(k_top, probs.shape[1]))
+        else:
+            vals = idxs = None
+        j, matched = C._phase1(centroids, counts, n, feats, threshold)
+        valid = jnp.arange(feats.shape[0], dtype=jnp.int32) < n_real
+        state = C._fold_matched(C.ClusterState(centroids, counts, n), feats,
+                                j, jnp.logical_and(matched, valid))
+        return (state.centroids, state.counts, state.n,
+                probs, feats, j, matched, vals, idxs)
+
+    fn = jax.jit(megastep, donate_argnums=_donate_argnums())
+    _MEGASTEP_JITS[key] = fn
+    if len(_MEGASTEP_JITS) > _MEGASTEP_JITS_MAX:
+        _MEGASTEP_JITS.popitem(last=False)
+    return fn
+
+
+def _scan_tail_jit() -> Callable:
+    """Sequential rule over the gathered unmatched subsequence — the
+    second (and last) device dispatch of a batch. The gather is fused in
+    so the padded feats never round-trip through the host."""
+    global _SCAN_TAIL_JIT
+    if _SCAN_TAIL_JIT is not None:
+        return _SCAN_TAIL_JIT
+
+    def scan_tail(centroids, counts, n, feats, gather, valid, threshold):
+        state = C.ClusterState(centroids, counts, n)
+        state, sub_ids = C._scan_unmatched(state, feats[gather], valid,
+                                           threshold)
+        return state.centroids, state.counts, state.n, sub_ids
+
+    _SCAN_TAIL_JIT = jax.jit(scan_tail, donate_argnums=_donate_argnums())
+    return _SCAN_TAIL_JIT
+
+
+def staged_cheap_apply(cheap_fn: Callable, cfg) -> Callable:
+    """Host-staged reference wrapper over a traceable ``cheap_fn``: jitted
+    forward with the SAME ``batch_bucket`` padding the pipeline uses,
+    returning numpy ``(probs, feats)``. This is the baseline the fused
+    megastep is benchmarked — and byte-compared — against."""
+    fwd = jax.jit(cheap_fn)
+
+    def apply(crops: np.ndarray):
+        n = len(crops)
+        if n == 0:
+            p_s, f_s = jax.eval_shape(
+                cheap_fn, jax.ShapeDtypeStruct((8,) + crops.shape[1:],
+                                               jnp.float32))
+            return (np.zeros((0, p_s.shape[1]), np.float32),
+                    np.zeros((0, f_s.shape[1]), np.float32))
+        padded = _pad_rows(np.asarray(crops), batch_bucket(n, cfg.batch_size))
+        probs, feats = fwd(jnp.asarray(padded))
+        return (np.asarray(probs, np.float32)[:n],
+                np.asarray(feats, np.float32)[:n])
+
+    return apply
+
+
+# ---------------------------------------------------------------------------
+# the pipeline
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PipelineStats:
+    n_batches: int = 0            # megasteps dispatched
+    n_objects: int = 0            # real rows folded (pad rows excluded)
+    n_dispatches: int = 0         # device computations launched
+    n_tail_scans: int = 0         # batches that needed the unmatched tail
+    n_eviction_syncs: int = 0     # host syncs on state.n (bound crossed)
+    compile_hits: int = 0         # megastep (bucket, res) key already seen
+    compile_misses: int = 0       # fresh megastep (bucket, res) key
+    tail_compile_hits: int = 0    # tail-scan pad bucket P already seen
+    tail_compile_misses: int = 0  # fresh tail-scan pad bucket P
+
+    @property
+    def dispatches_per_batch(self) -> float:
+        return self.n_dispatches / max(self.n_batches, 1)
+
+
+@dataclass
+class _InFlight:
+    """One dispatched-but-not-yet-host-folded batch."""
+    crops: np.ndarray             # real rows only
+    objs: np.ndarray
+    frames: np.ndarray
+    n: int
+    probs: jax.Array              # (bucket, C) device
+    feats: jax.Array              # (bucket, D) device
+    vals: jax.Array               # (bucket, k) device top-K values
+    idxs: jax.Array               # (bucket, k) device top-K indices
+    j: np.ndarray = field(default=None)         # (n,) host, after resolve
+    matched: np.ndarray = field(default=None)   # (n,) host bool
+    unmatched_idx: np.ndarray = field(default=None)
+    sub_ids: Optional[jax.Array] = None         # scan-tail ids (device)
+
+
+class IngestPipeline:
+    """Owns the fused megastep + double buffering for ONE ingestor.
+
+    ``cheap_fn(crops (B, R, R, 3)) -> (probs (B, C), feats (B, D))`` must
+    be jax-traceable and per-example pure (every inference CNN here is).
+    Construct, then pass as ``StreamingIngestor(..., pipeline=...)`` — the
+    ingestor binds itself and routes ``_drain_ready`` / tail folds through
+    ``submit``/``flush_pending``. ``topk_sink(objs, vals, idxs)``, when
+    given, receives each folded batch's per-object top-K classes (the
+    megastep emits them for free; without a sink they are never fetched).
+    The K defaults to ``cfg.K`` clamped to the model's class width —
+    ``TopKIndex``'s ``min(K, C)`` semantics — while an *explicit*
+    ``topk_k`` wider than the class width raises, matching
+    ``kernels/ops.topk``.
+    """
+
+    def __init__(self, cheap_fn: Callable, cfg=None,
+                 topk_k: Optional[int] = None,
+                 topk_sink: Optional[Callable] = None):
+        self.cheap_fn = cheap_fn
+        self.cfg = cfg
+        if cfg is not None:
+            self._check_clustering(cfg)
+        self.topk_k = topk_k
+        self.topk_sink = topk_sink
+        self.stats = PipelineStats()
+        self._ing = None
+        self._pending: Optional[_InFlight] = None
+        self._seen_keys = set()
+        self._megastep_fn: Optional[Callable] = None   # set at dispatch
+        self._n_hi = 0                # upper bound on live clusters
+
+    # -- wiring ----------------------------------------------------------------
+
+    @staticmethod
+    def _check_clustering(cfg):
+        """The megastep hard-codes the fused clustering semantics
+        (phase-1 assign + matched fold + unmatched tail); running it under
+        a config that names another variant would silently break the
+        byte-identity contract with the staged path."""
+        if cfg.clustering != "fused":
+            raise ValueError(
+                f"IngestPipeline implements clustering='fused' only; got "
+                f"cfg.clustering={cfg.clustering!r} — use the host-staged "
+                f"cheap_apply path for other variants")
+
+    def _bind(self, ingestor):
+        if self._ing is not None and self._ing is not ingestor:
+            raise ValueError("IngestPipeline is already bound to an "
+                             "ingestor; build one pipeline per stream")
+        self._check_clustering(ingestor.cfg)
+        if self.cfg is not None and self.cfg != ingestor.cfg:
+            raise ValueError(
+                "IngestPipeline cfg differs from the ingestor's cfg; the "
+                "megastep clusters/evicts with its own threshold and "
+                "table size, so a mismatch would silently diverge from "
+                "the staged path — construct with cfg=None to inherit, "
+                "or pass the same IngestConfig to both")
+        self._ing = ingestor
+        if self.cfg is None:
+            self.cfg = ingestor.cfg
+
+    def reset(self):
+        """Shard rollover: clustering state was reset by the ingestor."""
+        if self._pending is not None:
+            raise RuntimeError("reset() with a pending batch; drain first")
+        self._n_hi = 0
+
+    # -- driver API ------------------------------------------------------------
+
+    def submit(self, crops: np.ndarray, objs: np.ndarray,
+               frames: np.ndarray):
+        """Dispatch one batch's megastep, host-fold the previous batch
+        while the device runs, then resolve this batch's assignments
+        (tail scan + eviction bookkeeping). Batches must be submitted in
+        stream order — ``StreamingIngestor`` guarantees this."""
+        n = len(objs)
+        if n == 0:
+            return
+        ing = self._ing
+        if ing is None:
+            raise RuntimeError("pipeline is not bound to an ingestor; "
+                               "pass it to StreamingIngestor(pipeline=...)")
+        t0 = time.perf_counter()
+        if ing._state is None:
+            self._init_state(crops)
+        rec = self._dispatch(crops, objs, frames)
+        # double buffer: fold batch N-1 on the host while the device runs N
+        prev, self._pending = self._pending, None
+        ing.stats.wall_s += time.perf_counter() - t0
+        if prev is not None:
+            self._fold(prev)
+        self._resolve(rec)
+
+    def flush_pending(self):
+        """Host-fold the outstanding batch (publication barrier: flush /
+        finish / seal call this before the index is observed)."""
+        if self._pending is not None:
+            rec, self._pending = self._pending, None
+            self._fold(rec)
+
+    def jit_cache_entries(self) -> dict:
+        """REAL trace-cache entry counts of the shared megastep / tail
+        jits (``-1`` if this jax version lacks introspection). This is
+        what the CI retrace gate checks: the per-pipeline
+        ``compile_hits/misses`` counters track (bucket, res) key novelty
+        only and cannot see an XLA retrace caused by dtype or weak-type
+        drift."""
+        def size(fn):
+            if fn is None:
+                return 0
+            try:
+                return int(fn._cache_size())
+            except Exception:
+                return -1
+        # the exact jit this pipeline dispatched — no key reconstruction
+        # that could drift from _dispatch and leave the gate measuring 0
+        return {"megastep": size(self._megastep_fn),
+                "tail": size(_SCAN_TAIL_JIT)}
+
+    # -- internals -------------------------------------------------------------
+
+    def _init_state(self, crops: np.ndarray):
+        probs_s, feats_s = jax.eval_shape(
+            self.cheap_fn,
+            jax.ShapeDtypeStruct((8,) + crops.shape[1:], jnp.float32))
+        if self.topk_k is not None and self.topk_k > probs_s.shape[1]:
+            # an explicit topk_k beyond the class width is a config error
+            # (same contract as kernels/ops.topk); the cfg.K default is
+            # clamped instead, mirroring TopKIndex's min(K, C) semantics
+            raise ValueError(
+                f"topk_k={self.topk_k} exceeds the model's "
+                f"{probs_s.shape[1]} classes")
+        self._ing._state = C.init_state(self.cfg.max_clusters,
+                                        feats_s.shape[1])
+        self._n_hi = 0
+
+    def _dispatch(self, crops, objs, frames) -> _InFlight:
+        n = len(objs)
+        bucket = batch_bucket(n, self.cfg.batch_size)
+        key = (bucket, crops.shape[1])
+        if key in self._seen_keys:
+            self.stats.compile_hits += 1
+        else:
+            self._seen_keys.add(key)
+            self.stats.compile_misses += 1
+        k_top = self.topk_k if self.topk_k is not None else self.cfg.K
+        fn = self._megastep_fn = _megastep_jit(self.cheap_fn, k_top,
+                                               self.topk_sink is not None)
+        st = self._ing._state
+        out = fn(st.centroids, st.counts, st.n,
+                 jnp.asarray(self.cfg.threshold, jnp.float32),
+                 np.int32(n), jnp.asarray(_pad_rows(np.asarray(crops),
+                                                    bucket)))
+        cen, cnt, nn, probs, feats, j, matched, vals, idxs = out
+        self._ing._state = C.ClusterState(cen, cnt, nn)
+        self.stats.n_dispatches += 1
+        self.stats.n_batches += 1
+        return _InFlight(crops=crops, objs=objs, frames=frames, n=n,
+                         probs=probs, feats=feats, vals=vals, idxs=idxs,
+                         j=j, matched=matched)
+
+    def _resolve(self, rec: _InFlight):
+        """Sync the tiny assignment outputs, run the unmatched tail, and
+        decide eviction — everything batch N+1's megastep depends on.
+        Times itself into ``stats.wall_s``, pausing around ``_fold`` (it
+        keeps its own clock) so eviction batches are not double-counted."""
+        ing = self._ing
+        t0 = time.perf_counter()
+        j, matched = jax.device_get((rec.j, rec.matched))
+        rec.j = np.asarray(j)[:rec.n]
+        rec.matched = np.asarray(matched)[:rec.n]
+        rec.unmatched_idx = np.nonzero(~rec.matched)[0]
+        U = len(rec.unmatched_idx)
+        if U:
+            # identical tail construction to cluster_fused: gather indices
+            # padded to a power-of-two bucket, invalid rows are no-ops.
+            # Tail executables are keyed by (P, feats bucket) — a bounded
+            # set (P is a power of two <= bucket), tracked so a retrace
+            # regression in the tail path also trips the CI compile gate
+            P = C._pad_bucket(U)
+            tail_key = ("tail", P, rec.feats.shape[0])
+            if tail_key in self._seen_keys:
+                self.stats.tail_compile_hits += 1
+            else:
+                self._seen_keys.add(tail_key)
+                self.stats.tail_compile_misses += 1
+            gather = np.zeros((P,), np.int64)
+            gather[:U] = rec.unmatched_idx
+            st = ing._state
+            cen, cnt, nn, sub_ids = _scan_tail_jit()(
+                st.centroids, st.counts, st.n, rec.feats,
+                jnp.asarray(gather), jnp.asarray(np.arange(P) < U),
+                jnp.asarray(self.cfg.threshold, jnp.float32))
+            ing._state = C.ClusterState(cen, cnt, nn)
+            rec.sub_ids = sub_ids
+            self.stats.n_dispatches += 1
+            self.stats.n_tail_scans += 1
+            self._n_hi += U
+        # eviction uses the same trigger as the staged path (state.n at
+        # high water), but only syncs when the bound says it could fire:
+        # n_hi >= actual n always, so no staged eviction point is missed
+        hw = int(self.cfg.high_water * self.cfg.max_clusters)
+        if self._n_hi >= hw:
+            self.stats.n_eviction_syncs += 1
+            n_live = int(jax.device_get(ing._state.n))
+            self._n_hi = n_live
+            if n_live >= hw:
+                # the remap must not run before this batch's slots are
+                # translated: fold now (no overlap for this rare batch)
+                ing.stats.wall_s += time.perf_counter() - t0
+                self._fold(rec)
+                t0 = time.perf_counter()
+                ing._evict_live()
+                self._n_hi = int(jax.device_get(ing._state.n))
+                ing.stats.wall_s += time.perf_counter() - t0
+                return
+        self._pending = rec
+        ing.stats.wall_s += time.perf_counter() - t0
+
+    def _fold(self, rec: _InFlight):
+        """Host side of the fold: scatter tail ids, slot → cid, SoA index
+        update — mirrors the staged ``fold_batch`` exactly."""
+        ing = self._ing
+        t0 = time.perf_counter()
+        slots = rec.j.astype(np.int32)
+        if len(rec.unmatched_idx):
+            slots[rec.unmatched_idx] = \
+                np.asarray(rec.sub_ids)[:len(rec.unmatched_idx)]
+        probs = np.asarray(rec.probs, np.float32)[:rec.n]
+        feats = np.asarray(rec.feats, np.float32)[:rec.n]
+        ing.stats.n_cnn_invocations += rec.n
+        ing.stats.cheap_flops += rec.n * ing.cheap_flops_per_image
+        ing._fold_rows(rec.crops, rec.objs, rec.frames, probs, feats, slots)
+        self.stats.n_objects += rec.n
+        if self.topk_sink is not None:
+            self.topk_sink(rec.objs, np.asarray(rec.vals)[:rec.n],
+                           np.asarray(rec.idxs)[:rec.n])
+        ing.stats.wall_s += time.perf_counter() - t0

@@ -100,14 +100,84 @@ class _PixelTracker:
         return roots
 
 
+class _ChunkBuffer:
+    """Unique-object buffer as a list of chunks: appends are O(1) and
+    ``take`` concatenates only the rows taken, replacing the old
+    O(n²) ``np.concatenate`` growth. ``take`` on an empty buffer returns
+    correctly-shaped empties (the old array-growth buffer crashed with
+    ``None[:0]`` before the first unique arrived)."""
+
+    def __init__(self):
+        self._crops: List[np.ndarray] = []
+        self._objs: List[np.ndarray] = []
+        self._frames: List[np.ndarray] = []
+        self._n = 0
+        self._crop_shape: Optional[tuple] = None
+        self._dtype = np.float32
+
+    def __len__(self) -> int:
+        return self._n
+
+    def append(self, crops: np.ndarray, objs: np.ndarray,
+               frames: np.ndarray):
+        if self._crop_shape is None and crops.ndim > 1:
+            self._crop_shape = crops.shape[1:]
+            self._dtype = crops.dtype
+        if len(objs) == 0:
+            return
+        self._crops.append(crops)
+        self._objs.append(np.asarray(objs, np.int64))
+        self._frames.append(np.asarray(frames, np.int64))
+        self._n += len(objs)
+
+    def _empty(self):
+        shape = (0,) + (self._crop_shape if self._crop_shape is not None
+                        else (0, 0, 3))
+        return (np.zeros(shape, self._dtype), np.zeros((0,), np.int64),
+                np.zeros((0,), np.int64))
+
+    def take(self, k: int):
+        """Pop the first ``k`` rows (all rows if ``k`` exceeds the
+        buffer)."""
+        if k <= 0 or self._n == 0:
+            return self._empty()
+        k = min(k, self._n)
+        crops, objs, frames, got = [], [], [], 0
+        while got < k:
+            c, o, f = self._crops[0], self._objs[0], self._frames[0]
+            need = k - got
+            if len(o) <= need:
+                self._crops.pop(0)
+                self._objs.pop(0)
+                self._frames.pop(0)
+            else:
+                self._crops[0] = c[need:]
+                self._objs[0] = o[need:]
+                self._frames[0] = f[need:]
+                c, o, f = c[:need], o[:need], f[:need]
+            crops.append(c)
+            objs.append(o)
+            frames.append(f)
+            got += len(o)
+        self._n -= k
+        if len(objs) == 1:
+            return crops[0], objs[0], frames[0]
+        return (np.concatenate(crops), np.concatenate(objs),
+                np.concatenate(frames))
+
+
 class StreamingIngestor:
     """Incremental Focus ingest for one stream, fed in chunks.
 
     ``cheap_apply(crops (B,R,R,3)) -> (probs (B, C_local), feats (B, D))``
     may be ``None`` when the ingestor is driven by a ``MultiStreamRunner``
-    (which supplies CNN outputs for stacked device batches). ``feed`` /
-    ``flush`` / ``finish`` are the lifecycle; ``ingest()`` in
-    ``core.ingest`` is the single-chunk wrapper.
+    (which supplies CNN outputs for stacked device batches) or when a
+    fused ``core.pipeline.IngestPipeline`` is given via ``pipeline=`` —
+    the pipeline then runs CNN forward + top-K + clustering as one
+    device-resident megastep and routes the host fold back through
+    ``_fold_rows`` (DESIGN.md §9). ``feed`` / ``flush`` / ``finish`` are
+    the lifecycle; ``ingest()`` in ``core.ingest`` is the single-chunk
+    wrapper.
 
     With a ``catalog`` (``core.archive.ShardCatalog``) the ingestor rolls
     the live index over into time shards: after ``shard_objects`` fed
@@ -127,17 +197,22 @@ class StreamingIngestor:
                  class_map: Optional[ClassMap] = None,
                  n_local_classes: Optional[int] = None,
                  catalog=None, shard_objects: Optional[int] = None,
-                 shard_frames: Optional[int] = None):
+                 shard_frames: Optional[int] = None, pipeline=None):
+        if pipeline is not None and cheap_apply is not None:
+            raise ValueError(
+                "pass either cheap_apply (host-staged) or pipeline "
+                "(fused megastep), not both")
         self.cheap_apply = cheap_apply
         self.cheap_flops_per_image = cheap_flops_per_image
         self.cfg = cfg if cfg is not None else IngestConfig()
         self.class_map = class_map
         self.n_local_classes = n_local_classes
         self.stats = IngestStats()
-        if catalog is not None and cheap_apply is None:
+        self.pipeline = pipeline
+        if catalog is not None and cheap_apply is None and pipeline is None:
             raise ValueError(
-                "shard rollover needs a self-driven ingestor "
-                "(cheap_apply); runner-driven ingestors cannot seal")
+                "shard rollover needs a self-driven ingestor (cheap_apply "
+                "or pipeline); runner-driven ingestors cannot seal")
         if catalog is None and (shard_objects is not None
                                 or shard_frames is not None):
             raise ValueError("shard_objects/shard_frames need a catalog")
@@ -148,6 +223,10 @@ class StreamingIngestor:
         self.catalog = catalog
         self.shard_objects = shard_objects
         self.shard_frames = shard_frames
+        if pipeline is not None:
+            # bind last: a constructor rejected above must not consume
+            # the pipeline (binding is permanent per stream)
+            pipeline._bind(self)
         try:
             self._cluster_fn = C.CLUSTER_FNS[self.cfg.clustering]
         except KeyError:
@@ -166,9 +245,7 @@ class StreamingIngestor:
         self._next_cid = 0
         self._tracker = _PixelTracker(self.cfg.pixel_diff_threshold)
         # unique-object buffer, awaiting a full CNN batch
-        self._buf_crops: Optional[np.ndarray] = None
-        self._buf_objs = np.zeros((0,), np.int64)
-        self._buf_frames = np.zeros((0,), np.int64)
+        self._buf = _ChunkBuffer()
         # pixel-diff duplicates awaiting their root's batch
         self._dup_objs: List[np.ndarray] = []
         self._dup_frames: List[np.ndarray] = []
@@ -211,11 +288,11 @@ class StreamingIngestor:
 
     @property
     def n_ready_batches(self) -> int:
-        return len(self._buf_objs) // self.cfg.batch_size
+        return len(self._buf) // self.cfg.batch_size
 
     @property
     def n_pending_unique(self) -> int:
-        return len(self._buf_objs)
+        return len(self._buf)
 
     @property
     def n_pending_dups(self) -> int:
@@ -355,18 +432,11 @@ class StreamingIngestor:
         else:
             self._buffer_unique(crops, obj_ids, frames)
         self.stats.wall_s += time.perf_counter() - t0
-        if self.cheap_apply is not None:
+        if self.cheap_apply is not None or self.pipeline is not None:
             self._drain_ready()
 
     def _buffer_unique(self, crops, obj_ids, frames):
-        if len(obj_ids) == 0:
-            return
-        if self._buf_crops is None:
-            self._buf_crops = crops
-        else:
-            self._buf_crops = np.concatenate([self._buf_crops, crops])
-        self._buf_objs = np.concatenate([self._buf_objs, obj_ids])
-        self._buf_frames = np.concatenate([self._buf_frames, frames])
+        self._buf.append(crops, obj_ids, frames)
 
     def take_ready_batch(self):
         """Pop one full CNN batch of buffered uniques (runner API)."""
@@ -374,19 +444,20 @@ class StreamingIngestor:
         return self._take(b)
 
     def take_tail(self):
-        """Pop the remaining partial batch (runner finish)."""
-        return self._take(len(self._buf_objs))
+        """Pop the remaining partial batch (runner finish); empty arrays
+        when nothing is buffered."""
+        return self._take(len(self._buf))
 
     def _take(self, k: int):
-        crops = self._buf_crops[:k]
-        objs = self._buf_objs[:k]
-        frames = self._buf_frames[:k]
-        self._buf_crops = self._buf_crops[k:]
-        self._buf_objs = self._buf_objs[k:]
-        self._buf_frames = self._buf_frames[k:]
-        return crops, objs, frames
+        return self._buf.take(k)
 
     def _drain_ready(self):
+        if self.pipeline is not None:
+            # the pipeline double-buffers internally: each submit
+            # dispatches the megastep, then host-folds the previous batch
+            while self.n_ready_batches:
+                self.pipeline.submit(*self.take_ready_batch())
+            return
         while self.n_ready_batches:
             crops, objs, frames = self.take_ready_batch()
             t0 = time.perf_counter()
@@ -401,7 +472,9 @@ class StreamingIngestor:
                    feats: np.ndarray):
         """Fold one CNN batch of unique objects into clustering state and
         the index — the loop body of the old one-shot ``ingest()``, with
-        ``slot_cid`` / eviction remaps carried across calls.
+        ``slot_cid`` / eviction remaps carried across calls. An
+        ``IngestPipeline`` computes clustering on-device instead and
+        enters below at ``_fold_rows`` with precomputed slots.
         """
         t0 = time.perf_counter()
         probs = np.asarray(probs)
@@ -409,18 +482,30 @@ class StreamingIngestor:
         self.stats.n_cnn_invocations += len(obj_ids)
         self.stats.cheap_flops += len(obj_ids) * self.cheap_flops_per_image
 
+        if self._state is None:
+            self._state = C.init_state(self.cfg.max_clusters, feats.shape[1])
+        state, slots = self._cluster_fn(self._state, feats,
+                                        self.cfg.threshold)
+        self._state = state
+        self._fold_rows(crops, obj_ids, frames, probs, feats,
+                        np.asarray(slots))
+        # eviction keeps the live table at M (paper: evict smallest)
+        if int(self._state.n) >= int(self.cfg.high_water
+                                     * self.cfg.max_clusters):
+            self._evict_live()
+        self.stats.wall_s += time.perf_counter() - t0
+
+    def _fold_rows(self, crops: np.ndarray, obj_ids: np.ndarray,
+                   frames: np.ndarray, probs: np.ndarray,
+                   feats: np.ndarray, slots: np.ndarray):
+        """Host bookkeeping for one clustered batch: slot -> cid mapping,
+        SoA index fold, delta accounting. Shared by the staged path
+        (``fold_batch``) and the fused pipeline."""
         if self.n_local_classes is None:
             self.n_local_classes = probs.shape[1]
         if self._index is None:
             self._index = TopKIndex(self.cfg.K, self.n_local_classes,
                                     self.class_map)
-        if self._state is None:
-            self._state = C.init_state(self.cfg.max_clusters, feats.shape[1])
-
-        state, slots = self._cluster_fn(self._state, feats,
-                                        self.cfg.threshold)
-        slots = np.asarray(slots)
-
         # slot -> cid, assigning fresh cids in first-appearance order
         unmapped = self._slot_cid[slots] < 0
         if unmapped.any():
@@ -440,18 +525,20 @@ class StreamingIngestor:
             self._index.store.row_cids[touched].tolist())
         self._delta_published += len(obj_ids)
 
-        # eviction keeps the live table at M (paper: evict smallest)
-        if int(state.n) >= int(self.cfg.high_water * self.cfg.max_clusters):
-            state, evicted, remap = C.evict_smallest(state,
-                                                     self.cfg.evict_frac)
-            self.stats.n_evictions += len(evicted)
-            self._delta_evictions += len(evicted)
-            new_slot_cid = np.full_like(self._slot_cid, -1)
-            live = remap >= 0
-            new_slot_cid[remap[live]] = self._slot_cid[live]
-            self._slot_cid = new_slot_cid
+    def _evict_live(self):
+        """Evict the smallest clusters from the live table and remap
+        ``slot_cid``. Host-side by design: eviction compacts the table
+        with an argsort and rewrites the slot -> cid map, both entangled
+        with index bookkeeping the device never sees."""
+        state, evicted, remap = C.evict_smallest(self._state,
+                                                 self.cfg.evict_frac)
+        self.stats.n_evictions += len(evicted)
+        self._delta_evictions += len(evicted)
+        new_slot_cid = np.full_like(self._slot_cid, -1)
+        live = remap >= 0
+        new_slot_cid[remap[live]] = self._slot_cid[live]
+        self._slot_cid = new_slot_cid
         self._state = state
-        self.stats.wall_s += time.perf_counter() - t0
 
     # -- shard rollover --------------------------------------------------------
 
@@ -469,12 +556,11 @@ class StreamingIngestor:
         fresh run, which is what makes every sealed shard byte-identical
         to a one-shot ``ingest()`` of its window."""
         self._drain_ready()
-        if len(self._buf_objs):
+        if len(self._buf):
             crops, objs, frames = self.take_tail()
-            t0 = time.perf_counter()
-            probs, feats = self.cheap_apply(crops)
-            self.stats.wall_s += time.perf_counter() - t0
-            self.fold_batch(crops, objs, frames, probs, feats)
+            self._fold_tail(crops, objs, frames)
+        if self.pipeline is not None:
+            self.pipeline.flush_pending()
         if self._index is None:
             self._index = self._empty_index()
         self._attach_eligible()
@@ -508,7 +594,20 @@ class StreamingIngestor:
         self._shard_frame_lo = None
         self._shard_frame_hi = None
         self._shard_window_end = None
+        if self.pipeline is not None:
+            self.pipeline.reset()
         return meta
+
+    def _fold_tail(self, crops, objs, frames):
+        """Fold a ragged tail batch through whichever CNN path drives this
+        ingestor (fused pipeline or host-staged cheap_apply)."""
+        if self.pipeline is not None:
+            self.pipeline.submit(crops, objs, frames)
+            return
+        t0 = time.perf_counter()
+        probs, feats = self.cheap_apply(crops)
+        self.stats.wall_s += time.perf_counter() - t0
+        self.fold_batch(crops, objs, frames, probs, feats)
 
     # -- publication -----------------------------------------------------------
 
@@ -555,6 +654,8 @@ class StreamingIngestor:
         refresh. Does NOT fold the partial unique batch — the batch
         partition must stay a function of the stream alone (that is what
         makes chunked and one-shot ingests identical)."""
+        if self.pipeline is not None:
+            self.pipeline.flush_pending()     # publication barrier
         t0 = time.perf_counter()
         self._attach_eligible()
         self._prune_root_cids()
@@ -591,19 +692,18 @@ class StreamingIngestor:
                 self._index = self._empty_index()
             self._finished = True
             return self._index, self.stats
-        if self.cheap_apply is not None:
+        if self.cheap_apply is not None or self.pipeline is not None:
             self._drain_ready()
-        if len(self._buf_objs):
-            if self.cheap_apply is None:
+        if len(self._buf):
+            if self.cheap_apply is None and self.pipeline is None:
                 raise RuntimeError(
                     "pending unique objects but no cheap_apply; a "
                     "runner-driven ingestor must be finished through "
                     "MultiStreamRunner.finish()")
             crops, objs, frames = self.take_tail()
-            t0 = time.perf_counter()
-            probs, feats = self.cheap_apply(crops)
-            self.stats.wall_s += time.perf_counter() - t0
-            self.fold_batch(crops, objs, frames, probs, feats)
+            self._fold_tail(crops, objs, frames)
+        if self.pipeline is not None:
+            self.pipeline.flush_pending()
         if self._index is None:          # empty stream: class width from the
             self._index = self._empty_index()   # class map, never dropped
         self._attach_eligible()
@@ -633,10 +733,11 @@ class MultiStreamRunner:
         if not ingestors:
             raise ValueError("need at least one ingestor")
         for name, ing in ingestors.items():
-            if ing.cheap_apply is not None:
+            if ing.cheap_apply is not None or ing.pipeline is not None:
                 raise ValueError(
-                    f"ingestor {name!r} owns a cheap_apply; runner-driven "
-                    f"ingestors must be constructed with cheap_apply=None")
+                    f"ingestor {name!r} owns a cheap_apply/pipeline; "
+                    f"runner-driven ingestors must be constructed with "
+                    f"neither")
         self.ingestors: Dict[str, StreamingIngestor] = dict(ingestors)
         self.cheap_apply = cheap_apply
         self.batch_pad = batch_pad

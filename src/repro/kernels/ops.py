@@ -39,7 +39,27 @@ def centroid_assign(feats, centroids, *, bb: int | None = None,
 
 
 def topk(logits, k: int, *, bb: int = 128):
-    """(B, C) -> (values (B, k), indices (B, k)) in descending order."""
+    """(B, C) -> (values (B, k) f32, indices (B, k) i32), descending.
+
+    Padding/trim contract (explicit — tiny batches included): the row
+    tile is ``min(bb, max(8, B))``, so a batch smaller than 8 rows still
+    runs one >= 8-row tile; B is padded up to a tile multiple and C up to
+    a 128-lane multiple with ``-3e38`` sentinels, and outputs are trimmed
+    back to ``[:B]``. Inputs must be > ``-3e38`` — the kernel reuses that
+    sentinel to mask already-extracted entries, so a row containing
+    ``-inf`` (e.g. masked log-probs) ties with the padding and yields
+    duplicate indices; class probabilities/logits are always in range.
+    For in-range inputs sentinel columns can never be selected because
+    ``k <= C``; ``k > C`` (or ``k < 1``) raises — there are only C real
+    classes to rank. ``B == 0`` short-circuits to empty outputs.
+    """
+    B, C = logits.shape
+    if not 1 <= k <= C:
+        raise ValueError(
+            f"k must be in [1, C={C}], got {k}: the top-k of a (B, {C}) "
+            f"logit matrix has at most {C} entries per row")
+    if B == 0:
+        return (jnp.zeros((0, k), jnp.float32), jnp.zeros((0, k), jnp.int32))
     return _tk.topk(logits, k, bb=bb, interpret=_interpret())
 
 

@@ -40,7 +40,19 @@ def _kernel(x_ref, v_ref, i_ref, *, k: int):
 
 @functools.partial(jax.jit, static_argnames=("k", "bb", "interpret"))
 def topk(logits, k: int, *, bb: int = 128, interpret: bool = True):
-    """logits (B, C) -> (values (B, k) f32, indices (B, k) i32), descending."""
+    """logits (B, C) -> (values (B, k) f32, indices (B, k) i32), descending.
+
+    Tiling: the row tile is clamped to ``min(bb, max(8, B))`` — a batch
+    under 8 rows still runs one 8-row tile (the VPU floor), and ``bb``
+    larger than the batch degrades to a single tile rather than an
+    oversized grid. B is padded to a tile multiple and C to a 128-lane
+    multiple with ``_NEG`` sentinel entries; padded rows compute garbage
+    that is trimmed by the final ``[:B]``, and padded columns lose every
+    max comparison for ``k <= C`` real passes (``kernels/ops.topk``
+    validates ``1 <= k <= C``). Inputs must be > ``_NEG`` — extraction
+    masks taken entries to the same sentinel, so values at or below it
+    (``-inf``) tie with padding and break the unique-index guarantee.
+    """
     B, C = logits.shape
     bb = min(bb, max(8, B))
     Bp = (B + bb - 1) // bb * bb

@@ -97,6 +97,52 @@ def test_topk_with_ties():
                                   np.tile(np.arange(5), (3, 1)))
 
 
+@pytest.mark.parametrize("B", [1, 2, 5, 7])
+def test_topk_tiny_batches_below_tile_floor(B):
+    """B < 8: the row tile clamps to the 8-row VPU floor, the batch is
+    padded up with -inf rows, and outputs are trimmed back to [:B]."""
+    lg = jax.random.normal(jax.random.PRNGKey(B), (B, 37))
+    v, i = ops.topk(lg, 3)
+    vr, ir = ref.topk_ref(lg, 3)
+    assert v.shape == (B, 3) and i.shape == (B, 3)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(vr), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+
+
+def test_topk_k_equals_C_is_full_sort():
+    lg = jax.random.normal(jax.random.PRNGKey(9), (5, 16))
+    v, i = ops.topk(lg, 16)
+    vr, ir = ref.topk_ref(lg, 16)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(vr), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+    # every column index appears exactly once per row (C-pad never leaks)
+    np.testing.assert_array_equal(np.sort(np.asarray(i), axis=1),
+                                  np.tile(np.arange(16), (5, 1)))
+
+
+def test_topk_k_out_of_range_raises():
+    lg = jax.random.normal(jax.random.PRNGKey(0), (4, 10))
+    with pytest.raises(ValueError):
+        ops.topk(lg, 11)          # k > C: only C classes exist to rank
+    with pytest.raises(ValueError):
+        ops.topk(lg, 0)
+
+
+def test_topk_empty_batch():
+    v, i = ops.topk(jnp.zeros((0, 12)), 4)
+    assert v.shape == (0, 4) and i.shape == (0, 4)
+
+
+def test_topk_oversized_bb_clamps_to_batch():
+    """bb far larger than B degrades to one tile — results identical to a
+    small explicit tile."""
+    lg = jax.random.normal(jax.random.PRNGKey(4), (3, 40))
+    v_big, i_big = ops.topk(lg, 5, bb=4096)
+    v_small, i_small = ops.topk(lg, 5, bb=8)
+    np.testing.assert_array_equal(np.asarray(i_big), np.asarray(i_small))
+    np.testing.assert_allclose(np.asarray(v_big), np.asarray(v_small))
+
+
 @settings(max_examples=25, deadline=None)
 @given(st.integers(1, 40), st.integers(2, 300), st.data())
 def test_topk_property(B, C, data):

@@ -1,0 +1,274 @@
+"""Fused ingest megastep equivalence harness (DESIGN.md §9).
+
+Core property: a ``StreamingIngestor`` driven by the device-resident
+``IngestPipeline`` (one-dispatch cheap-CNN → top-K → cluster megastep,
+double-buffered) saves a *byte-identical index on disk* — and identical
+``IngestStats`` counters — to the host-staged ``cheap_apply`` path over
+the same stream, across random chunk splits, eviction boundaries, and
+shard rollovers. Plus: the ≤ 2 dispatches-per-batch budget, the
+``(batch_bucket, input_res)`` compile cache, and the megastep's fused
+top-K outputs.
+"""
+import os
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import index_save_bytes as _save_bytes
+from conftest import make_chunks as _chunks
+from conftest import make_stream as _stream
+from repro.core.archive import ShardCatalog
+from repro.core.ingest import IngestConfig, ingest
+from repro.core.pipeline import (IngestPipeline, batch_bucket,
+                                 staged_cheap_apply)
+from repro.core.streaming import MultiStreamRunner, StreamingIngestor
+
+FEAT_DIM = 12
+N_CLASSES = 5
+
+
+def _cheap_fn(crops):
+    """Jax-traceable, per-example-pure cheap-CNN stand-in: feats/probs are
+    functions of the crop pixels alone (so bucket padding cannot leak
+    across rows)."""
+    flat = crops.reshape(crops.shape[0], -1)
+    feats = flat[:, :FEAT_DIM] * 10.0
+    probs = jax.nn.softmax(flat[:, FEAT_DIM:FEAT_DIM + N_CLASSES] * 5.0,
+                           axis=-1)
+    return probs, feats
+
+
+def _counters(stats):
+    return (stats.n_objects, stats.n_cnn_invocations, stats.n_pixel_dedup,
+            stats.n_evictions)
+
+
+# ---------------------------------------------------------------------------
+# the equivalence property (pipeline == staged == one-shot, byte for byte)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.data())
+def test_pipeline_equals_staged_byte_identical(data):
+    """Random stream, random chunk split, eviction-heavy config: the
+    fused-megastep ingestor saves byte-identically to the host-staged
+    ingestor fed the same chunks — and to one-shot ``ingest()`` — with
+    identical stats counters."""
+    seed = data.draw(st.integers(0, 10_000), label="seed")
+    n = data.draw(st.integers(0, 400), label="n")
+    batch_size = data.draw(st.sampled_from([32, 64, 100]), label="batch")
+    crops, frames = _stream(seed, n)
+    cfg = IngestConfig(K=2, threshold=1.5, max_clusters=24,
+                       batch_size=batch_size, high_water=0.8,
+                       evict_frac=0.5)
+
+    one_index, one_stats = ingest(crops, frames,
+                                  staged_cheap_apply(_cheap_fn, cfg),
+                                  1e9, cfg)
+
+    staged = StreamingIngestor(staged_cheap_apply(_cheap_fn, cfg), 1e9, cfg)
+    piped = StreamingIngestor(None, 1e9, cfg,
+                              pipeline=IngestPipeline(_cheap_fn, cfg))
+    for size in _chunks(data.draw, n):
+        taken, crops = crops[:size], crops[size:]
+        tf, frames = frames[:size], frames[size:]
+        staged.feed(taken, tf)
+        staged.flush()
+        piped.feed(taken, tf)
+        piped.flush()                 # publication barrier mid-stream
+    staged_index, staged_stats = staged.finish()
+    pipe_index, pipe_stats = piped.finish()
+
+    assert _save_bytes(pipe_index, "p") == _save_bytes(staged_index, "h")
+    assert _save_bytes(pipe_index, "p") == _save_bytes(one_index, "o")
+    assert _counters(pipe_stats) == _counters(staged_stats)
+    assert _counters(pipe_stats) == _counters(one_stats)
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([60, 110]))
+def test_pipeline_rollover_shards_byte_identical(seed, shard_objects):
+    """Shard rollover through the pipeline: every sealed shard file (and
+    the catalog manifest) is byte-identical to the staged rollover run."""
+    crops, frames = _stream(seed, 300)
+    cfg = IngestConfig(K=2, threshold=1.5, max_clusters=24, batch_size=48,
+                       high_water=0.8, evict_frac=0.5)
+    with tempfile.TemporaryDirectory() as d:
+        cat_s = ShardCatalog.open(os.path.join(d, "staged"))
+        ing_s = StreamingIngestor(staged_cheap_apply(_cheap_fn, cfg), 1e9,
+                                  cfg, catalog=cat_s,
+                                  shard_objects=shard_objects)
+        cat_p = ShardCatalog.open(os.path.join(d, "piped"))
+        ing_p = StreamingIngestor(None, 1e9, cfg, catalog=cat_p,
+                                  shard_objects=shard_objects,
+                                  pipeline=IngestPipeline(_cheap_fn, cfg))
+        for s in range(0, len(crops), 77):
+            ing_s.feed(crops[s:s + 77], frames[s:s + 77])
+            ing_p.feed(crops[s:s + 77], frames[s:s + 77])
+        ing_s.finish()
+        ing_p.finish()
+        assert len(cat_s.shards) == len(cat_p.shards) > 1
+        for ms, mp in zip(cat_s.shards, cat_p.shards):
+            for ext in (".json", ".npz"):
+                with open(os.path.join(cat_s.root, ms.path) + ext,
+                          "rb") as f:
+                    b_s = f.read()
+                with open(os.path.join(cat_p.root, mp.path) + ext,
+                          "rb") as f:
+                    b_p = f.read()
+                assert b_s == b_p, (ms.shard_id, ext)
+
+
+# ---------------------------------------------------------------------------
+# dispatch budget, compile cache, fused top-K outputs
+# ---------------------------------------------------------------------------
+
+def test_pipeline_dispatch_budget_and_compile_cache():
+    """The fused path issues at most 2 device dispatches per batch
+    (megastep + optional unmatched tail), and ragged tail batches land in
+    bucketed compile-cache keys — full batches all hit one key."""
+    crops, frames = _stream(7, 500)
+    cfg = IngestConfig(K=2, threshold=1.5, max_clusters=64, batch_size=60,
+                       pixel_diff=False)
+    pipe = IngestPipeline(_cheap_fn, cfg)
+    ing = StreamingIngestor(None, 1e9, cfg, pipeline=pipe)
+    ing.feed(crops, frames)
+    ing.finish()
+    assert pipe.stats.n_batches == 9          # 8 full + 1 tail (20 rows)
+    assert pipe.stats.n_dispatches <= 2 * pipe.stats.n_batches
+    assert pipe.stats.dispatches_per_batch <= 2.0
+    assert pipe.stats.n_objects == 500
+    # compile cache: one key for the 8 full batches, one tail bucket (32)
+    assert pipe.stats.compile_misses == 2
+    assert pipe.stats.compile_hits == 7
+
+
+def test_batch_bucket_shapes():
+    assert batch_bucket(512, 512) == 512      # full batch: exact
+    assert batch_bucket(700, 512) == 700      # oversize external batch
+    for n, want in [(1, 8), (8, 8), (9, 16), (52, 64), (300, 512)]:
+        assert batch_bucket(n, 512) == want
+    assert batch_bucket(70, 100) == 100       # tail bucket capped at batch
+
+
+def test_pipeline_topk_sink_matches_probs():
+    """The megastep's fused Pallas top-K outputs agree with the batch's
+    probabilities: descending values that index into each row's probs."""
+    got = []
+    crops, frames = _stream(3, 200)
+    cfg = IngestConfig(K=3, threshold=1.5, max_clusters=64, batch_size=64,
+                       pixel_diff=False)
+    pipe = IngestPipeline(_cheap_fn, cfg,
+                          topk_sink=lambda o, v, i: got.append((o, v, i)))
+    ing = StreamingIngestor(None, 1e9, cfg, pipeline=pipe)
+    ing.feed(crops, frames)
+    index, _ = ing.finish()
+    probs = np.asarray(jax.jit(_cheap_fn)(crops)[0])
+    seen = 0
+    for objs, vals, idxs in got:
+        assert vals.shape == (len(objs), cfg.K)
+        assert (np.diff(vals, axis=1) <= 1e-6).all()
+        np.testing.assert_allclose(
+            np.take_along_axis(probs[objs], idxs, 1), vals, atol=1e-6)
+        seen += len(objs)
+    assert seen == 200
+    # the with-topk megastep graph (compiled only when a sink consumes
+    # it) must still fold byte-identically to the staged path
+    staged = StreamingIngestor(staged_cheap_apply(_cheap_fn, cfg), 1e9, cfg)
+    staged.feed(crops, frames)
+    staged_index, _ = staged.finish()
+    assert _save_bytes(index, "p") == _save_bytes(staged_index, "s")
+
+
+# ---------------------------------------------------------------------------
+# contract errors
+# ---------------------------------------------------------------------------
+
+def test_ingestor_rejects_both_cheap_apply_and_pipeline():
+    cfg = IngestConfig(batch_size=8)
+    with pytest.raises(ValueError):
+        StreamingIngestor(staged_cheap_apply(_cheap_fn, cfg), 1e9, cfg,
+                          pipeline=IngestPipeline(_cheap_fn, cfg))
+
+
+def test_rejected_constructor_does_not_consume_pipeline():
+    """A StreamingIngestor constructor that raises (here: shard args
+    without a catalog) must not leave the pipeline bound — the caller
+    retries with a corrected constructor and the same pipeline."""
+    cfg = IngestConfig(batch_size=8)
+    pipe = IngestPipeline(_cheap_fn, cfg)
+    with pytest.raises(ValueError):
+        StreamingIngestor(None, 1e9, cfg, shard_objects=100, pipeline=pipe)
+    StreamingIngestor(None, 1e9, cfg, pipeline=pipe)     # retry works
+
+
+def test_pipeline_rejects_second_ingestor():
+    cfg = IngestConfig(batch_size=8)
+    pipe = IngestPipeline(_cheap_fn, cfg)
+    StreamingIngestor(None, 1e9, cfg, pipeline=pipe)
+    with pytest.raises(ValueError):
+        StreamingIngestor(None, 1e9, cfg, pipeline=pipe)
+
+
+def test_runner_rejects_pipeline_driven_ingestors():
+    cfg = IngestConfig(batch_size=8)
+    ing = StreamingIngestor(None, 1e9, cfg,
+                            pipeline=IngestPipeline(_cheap_fn, cfg))
+    with pytest.raises(ValueError):
+        MultiStreamRunner({"a": ing}, _cheap_fn)
+
+
+def test_pipeline_explicit_topk_wider_than_classes_raises():
+    """cfg.K wider than the class width is clamped (TopKIndex semantics),
+    but an explicit topk_k beyond it is a config error, matching
+    ops.topk."""
+    crops, frames = _stream(2, 50)
+    cfg = IngestConfig(K=2, threshold=1.5, batch_size=16, pixel_diff=False)
+    ing = StreamingIngestor(
+        None, 1e9, cfg,
+        pipeline=IngestPipeline(_cheap_fn, cfg, topk_k=N_CLASSES + 1))
+    with pytest.raises(ValueError):
+        ing.feed(crops, frames)
+    # the clamped default path ingests fine with K > C
+    wide = IngestConfig(K=N_CLASSES + 3, threshold=1.5, batch_size=16,
+                        pixel_diff=False)
+    ing2 = StreamingIngestor(None, 1e9, wide,
+                             pipeline=IngestPipeline(_cheap_fn, wide))
+    ing2.feed(crops, frames)
+    index, _ = ing2.finish()
+    assert index.n_objects == 50
+
+
+def test_pipeline_rejects_mismatched_cfg():
+    """A pipeline built with its own cfg must match the ingestor's —
+    otherwise the megastep would cluster with one threshold/table size
+    while the host folds with another."""
+    pipe = IngestPipeline(_cheap_fn, IngestConfig(batch_size=8,
+                                                  threshold=0.5))
+    with pytest.raises(ValueError):
+        StreamingIngestor(None, 1e9, IngestConfig(batch_size=8,
+                                                  threshold=0.9),
+                          pipeline=pipe)
+
+
+def test_pipeline_rejects_non_fused_clustering():
+    """The megastep hard-codes fused clustering semantics; a scan/batched
+    config must be rejected loudly, not silently diverge from staged."""
+    for variant in ("scan", "batched"):
+        cfg = IngestConfig(batch_size=8, clustering=variant)
+        with pytest.raises(ValueError):
+            IngestPipeline(_cheap_fn, cfg)
+        with pytest.raises(ValueError):
+            StreamingIngestor(None, 1e9, cfg,
+                              pipeline=IngestPipeline(_cheap_fn))
+
+
+def test_unbound_pipeline_submit_raises():
+    pipe = IngestPipeline(_cheap_fn, IngestConfig(batch_size=8))
+    with pytest.raises(RuntimeError):
+        pipe.submit(np.zeros((4, 6, 6, 3), np.float32),
+                    np.arange(4), np.zeros(4, np.int64))

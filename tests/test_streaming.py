@@ -8,14 +8,14 @@ one-shot ``ingest()`` over the concatenated stream, including across
 eviction boundaries. Plus: multi-stream runner equivalence, and
 query-while-ingest returning exactly what a fresh engine sees.
 """
-import os
-import tempfile
-
 import numpy as np
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from conftest import index_save_bytes as _save_bytes
+from conftest import make_chunks as _chunks
+from conftest import make_stream as _stream
 from repro.core.engine import QueryEngine
 from repro.core.index import TopKIndex
 from repro.core.ingest import IngestConfig, ingest
@@ -37,45 +37,6 @@ def _cheap(batch):
 
 def _gt_apply(batch):
     return np.rint(batch[:, 0, 0, 2] * 8).astype(np.int64) % N_CLASSES
-
-
-def _stream(seed, n=500, n_frames=None, dup_rate=0.35):
-    """Video-shaped stream: sorted frames, mode-patterned crops (so
-    clustering groups them), near-identical consecutive-frame duplicates
-    (so pixel differencing fires)."""
-    r = np.random.default_rng(seed)
-    n_frames = n_frames or max(n // 5, 2)
-    modes = r.random((20, 6, 6, 3)).astype(np.float32)
-    pick = r.integers(0, 20, n)
-    crops = np.clip(modes[pick] + r.normal(0, 0.05, (n, 6, 6, 3)), 0, 1
-                    ).astype(np.float32)
-    frames = np.sort(r.integers(0, n_frames, n))
-    for i in range(1, n):
-        if frames[i] == frames[i - 1] + 1 and r.random() < dup_rate:
-            crops[i] = np.clip(
-                crops[i - 1] + r.normal(0, 1e-3, crops[i].shape), 0, 1
-            ).astype(np.float32)
-    return crops, frames
-
-
-def _save_bytes(index, tag):
-    with tempfile.TemporaryDirectory() as d:
-        path = os.path.join(d, tag)
-        index.save(path)
-        with open(path + ".json", "rb") as f:
-            meta = f.read()
-        with open(path + ".npz", "rb") as f:
-            npz = f.read()
-        return meta, npz
-
-
-def _chunks(rng_draw, n, max_chunks=12):
-    k = rng_draw(st.integers(1, max_chunks))
-    if k == 1 or n < 2:
-        return [n]
-    cuts = sorted({rng_draw(st.integers(1, n - 1)) for _ in range(k - 1)})
-    bounds = [0] + cuts + [n]
-    return [b - a for a, b in zip(bounds, bounds[1:])]
 
 
 # ---------------------------------------------------------------------------
@@ -295,6 +256,34 @@ def test_default_obj_ids_are_arrival_positions_in_unsorted_chunk():
     pairs = set(zip(s._m_objs[:s.m_n].tolist(),
                     s._m_frames[:s.m_n].tolist()))
     assert pairs == {(1, 0), (4, 0), (2, 1), (5, 1), (0, 2), (3, 2)}
+
+
+def test_take_on_empty_buffer_returns_empty_arrays():
+    """Regression: ``take_tail``/``take_ready_batch`` on an ingestor whose
+    unique buffer is still empty crashed with ``None[:0]`` (TypeError) —
+    e.g. an external driver finishing a stream whose chunks were all
+    duplicates, before any unique object was buffered."""
+    ing = StreamingIngestor(None, 1e9, IngestConfig(batch_size=8))
+    for crops, objs, frames in (ing.take_tail(), ing.take_ready_batch()):
+        assert len(crops) == len(objs) == len(frames) == 0
+        assert objs.dtype == np.int64 and frames.dtype == np.int64
+    index, stats = ing.finish()
+    assert index.n_clusters == 0 and stats.n_objects == 0
+
+
+def test_take_tail_after_full_drain_keeps_crop_shape():
+    """After the buffer drains to empty, a further take returns empties
+    with the stream's crop shape (so a shape-polymorphic driver can still
+    batch them)."""
+    cfg = IngestConfig(batch_size=4, pixel_diff=False)
+    ing = StreamingIngestor(None, 1e9, cfg)
+    crops = np.random.default_rng(0).random((8, 6, 6, 3)).astype(np.float32)
+    ing.feed(crops, np.zeros(8, np.int64))
+    ing.take_ready_batch()
+    ing.take_ready_batch()
+    tail_crops, tail_objs, _ = ing.take_tail()
+    assert tail_crops.shape == (0, 6, 6, 3)
+    assert len(tail_objs) == 0
 
 
 def test_feed_after_finish_raises():
