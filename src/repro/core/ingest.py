@@ -35,13 +35,24 @@ class IngestConfig:
     evict_frac: float = 0.25
     high_water: float = 0.95        # evict when n >= high_water * M
     clustering: str = "fused"       # "scan" | "batched" | "fused"
+    # redundancy gate (DESIGN.md §10): match CNN-bound uniques against a
+    # ring of recent uniques from earlier frames; hits skip the CNN and
+    # attach to their ring root's cluster
+    gate: bool = False
+    gate_threshold: float = 0.02
+    gate_capacity: int = 512        # ring size (recent CNN-bound uniques)
+    # keep only frames with frame_id % frame_stride == 0 (absolute grid,
+    # so the kept set is a function of the stream alone, never chunking)
+    frame_stride: int = 1
 
 
 @dataclass
 class IngestStats:
     n_objects: int = 0
     n_cnn_invocations: int = 0
-    n_pixel_dedup: int = 0
+    n_pixel_dedup: int = 0          # §4.2 prev-frame tracker matches
+    n_gate_skipped: int = 0         # redundancy-gate ring matches
+    n_sampled_out: int = 0          # dropped by the frame stride
     cheap_flops: float = 0.0
     n_evictions: int = 0
     wall_s: float = 0.0

@@ -101,6 +101,66 @@ def sweep(crops: np.ndarray, frames: np.ndarray, gt_labels: np.ndarray,
     return evals
 
 
+@dataclass(frozen=True)
+class SamplerConfig:
+    """Knobs for the per-stream adaptive frame sampler (DESIGN.md §10)."""
+    min_stride: int = 1
+    max_stride: int = 30
+    # duplicate-rate hysteresis band: raise the stride above ``high``,
+    # lower it below ``low``, hold inside the band
+    dup_high: float = 0.80
+    dup_low: float = 0.50
+    recall_floor: float = 0.97      # the recall gate
+
+
+class AdaptiveSampler:
+    """AIMD frame-stride controller driven by observed redundancy.
+
+    Each ``observe`` window reports how many objects the gate/tracker
+    skipped vs. ingested. A high duplicate rate means the stream is
+    redundant — the stride *additively* increases (+1), spending less on
+    near-identical frames. A low rate means content is changing — the
+    stride *multiplicatively* halves, the classic AIMD asymmetry: probe
+    savings slowly, give them back fast.
+
+    The recall gate overrides everything: when a probe measures recall
+    against ungated ingest below ``recall_floor``, the stride collapses
+    to ``min_stride`` immediately — throughput is never bought with
+    recall. The caller wires the output to
+    ``StreamingIngestor.set_frame_stride``.
+    """
+
+    def __init__(self, cfg: SamplerConfig = SamplerConfig()):
+        if cfg.min_stride < 1 or cfg.max_stride < cfg.min_stride:
+            raise ValueError(f"bad stride bounds: {cfg}")
+        if not 0.0 <= cfg.dup_low <= cfg.dup_high <= 1.0:
+            raise ValueError(f"bad duplicate-rate band: {cfg}")
+        self.cfg = cfg
+        self.stride = cfg.min_stride
+
+    def observe(self, n_ingested: int, n_skipped: int,
+                recall: Optional[float] = None) -> int:
+        """One control step; returns the stride for the next window.
+
+        ``n_ingested`` — objects that reached the CNN this window;
+        ``n_skipped`` — objects the tracker/gate/stride filtered out;
+        ``recall`` — optional probe of gated recall vs. ungated ingest.
+        """
+        c = self.cfg
+        if recall is not None and recall < c.recall_floor:
+            self.stride = c.min_stride
+            return self.stride
+        total = n_ingested + n_skipped
+        if total <= 0:
+            return self.stride
+        dup_rate = n_skipped / total
+        if dup_rate > c.dup_high:
+            self.stride = min(self.stride + 1, c.max_stride)
+        elif dup_rate < c.dup_low:
+            self.stride = max(self.stride // 2, c.min_stride)
+        return self.stride
+
+
 def pareto_boundary(evals: Sequence[ConfigEval]) -> List[ConfigEval]:
     """Non-dominated (ingest, query) points among viable configs."""
     viable = [e for e in evals if e.viable]

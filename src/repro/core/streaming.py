@@ -37,7 +37,7 @@ import numpy as np
 from repro.core import clustering as C
 from repro.core.index import ClassMap, TopKIndex
 from repro.core.ingest import IngestConfig, IngestStats
-from repro.data.bgsub import pixel_difference
+from repro.data.bgsub import match_flat, pixel_difference
 
 
 @dataclass
@@ -98,6 +98,100 @@ class _PixelTracker:
         self._open_crops.append(crops)
         self._open_roots.append(roots)
         return roots
+
+    def amend_last(self, roots: np.ndarray):
+        """Replace the roots of the most recent ``resolve`` segment.
+
+        The redundancy gate rewrites roots *after* the tracker resolved a
+        group; the tracker must see the rewrite, or a next-frame tracker
+        match would chain to the crop's own (never-CNN'd, never-folded)
+        id and its duplicate record could never attach.
+        """
+        self._open_roots[-1] = np.asarray(roots, np.int64)
+
+
+class _RedundancyGate:
+    """Cross-frame redundancy gate in front of the CNN (DESIGN.md §10).
+
+    The §4.2 tracker only matches consecutive frames; on a static camera
+    the same object re-surfaces for minutes. This gate keeps a bounded
+    FIFO ring of the most recent *CNN-bound* unique crops (flattened)
+    with their root ids; a new crop matching a ring entry (mean abs diff
+    STRICTLY below ``threshold``, via ``bgsub.match_flat`` — the Pallas
+    ``pixel_diff`` kernel on accelerators) skips the CNN and attaches to
+    the ring root's cluster through the duplicate/attach log.
+
+    Chunk invariance: matching only sees entries from strictly earlier
+    frames — a frame's own uniques are queued and admitted to the ring
+    when the frame *closes* (a later frame arrives), mirroring the
+    tracker's open/prev machinery, so a frame group split across chunks
+    gates identically to an unsplit feed. Ring admission and trimming
+    happen per closed frame group, a function of the stream alone.
+    """
+
+    def __init__(self, threshold: float, capacity: int,
+                 backend: str = "auto"):
+        if capacity < 1:
+            raise ValueError(f"gate_capacity must be >= 1, got {capacity}")
+        self.threshold = threshold
+        self.capacity = capacity
+        self.backend = backend
+        self._ring_crops: List[np.ndarray] = []    # per-frame (k, D) groups
+        self._ring_roots: List[np.ndarray] = []
+        self._n = 0
+        self._open_frame: Optional[int] = None
+        self._open_crops: List[np.ndarray] = []
+        self._open_roots: List[np.ndarray] = []
+
+    def match(self, f: int, crops2d: np.ndarray) -> np.ndarray:
+        """Ring root id per crop (or -1) for one frame-``f`` segment.
+        Also advances the open-frame bookkeeping, so call it once per
+        resolved segment even when ``crops2d`` is empty."""
+        if self._open_frame is None or f > self._open_frame:
+            if self._open_crops:
+                self._push(np.concatenate(self._open_crops),
+                           np.concatenate(self._open_roots))
+                self._open_crops, self._open_roots = [], []
+            self._open_frame = f
+        out = np.full((len(crops2d),), -1, np.int64)
+        if self._n == 0 or len(crops2d) == 0:
+            return out
+        m = match_flat(crops2d, np.concatenate(self._ring_crops),
+                       self.threshold, backend=self.backend)
+        hit = m >= 0
+        if hit.any():
+            roots = np.concatenate(self._ring_roots)
+            out[hit] = roots[m[hit]]
+        return out
+
+    def admit(self, crops2d: np.ndarray, roots: np.ndarray):
+        """Queue frame-``f`` CNN-bound uniques (f = the frame of the last
+        ``match`` call); they join the ring when the frame closes."""
+        if len(crops2d):
+            self._open_crops.append(crops2d)
+            self._open_roots.append(np.asarray(roots, np.int64))
+
+    def _push(self, crops: np.ndarray, roots: np.ndarray):
+        self._ring_crops.append(crops)
+        self._ring_roots.append(roots)
+        self._n += len(roots)
+        # trim whole frame groups while the remainder still covers the
+        # capacity: ring size stays in [capacity, capacity + group)
+        while len(self._ring_roots) > 1 \
+                and self._n - len(self._ring_roots[0]) >= self.capacity:
+            self._n -= len(self._ring_roots[0])
+            self._ring_crops.pop(0)
+            self._ring_roots.pop(0)
+
+    def live_roots(self) -> set:
+        """Root ids a future gate match may still return (ring + open) —
+        their ``_root_cid`` entries must survive pruning."""
+        keep: set = set()
+        for seg in self._ring_roots:
+            keep.update(seg.tolist())
+        for seg in self._open_roots:
+            keep.update(seg.tolist())
+        return keep
 
 
 class _ChunkBuffer:
@@ -244,6 +338,13 @@ class StreamingIngestor:
         self._slot_cid = np.full(self.cfg.max_clusters, -1, np.int64)
         self._next_cid = 0
         self._tracker = _PixelTracker(self.cfg.pixel_diff_threshold)
+        self._gate = (_RedundancyGate(self.cfg.gate_threshold,
+                                      self.cfg.gate_capacity)
+                      if self.cfg.gate else None)
+        if self.cfg.frame_stride < 1:
+            raise ValueError(
+                f"frame_stride must be >= 1: {self.cfg.frame_stride}")
+        self._frame_stride = self.cfg.frame_stride
         # unique-object buffer, awaiting a full CNN batch
         self._buf = _ChunkBuffer()
         # pixel-diff duplicates awaiting their root's batch
@@ -305,6 +406,22 @@ class StreamingIngestor:
         concatenated stream."""
         return self._shard_obj_base
 
+    @property
+    def frame_stride(self) -> int:
+        return self._frame_stride
+
+    def set_frame_stride(self, stride: int):
+        """Retarget the sampling stride (adaptive controller hook).
+
+        Takes effect from the next ``feed``. Changing the stride mid-run
+        trades the chunked==one-shot byte-identity for throughput — a
+        one-shot run cannot replay a stride schedule — so the controller
+        only drives it on live deployments, never in equivalence tests.
+        """
+        if stride < 1:
+            raise ValueError(f"frame_stride must be >= 1: {stride}")
+        self._frame_stride = int(stride)
+
     # -- feeding ---------------------------------------------------------------
 
     def feed(self, crops: np.ndarray, frames: np.ndarray,
@@ -326,12 +443,6 @@ class StreamingIngestor:
         arr_pos = None
         if obj_ids is not None:
             obj_ids = np.asarray(obj_ids, np.int64)
-        elif self.catalog is None:
-            # arrival positions, assigned before the frame-sort (under
-            # rollover ids restart per shard, so they are assigned
-            # per-segment inside the loop below instead)
-            obj_ids = np.arange(self._obj_next, self._obj_next + n,
-                                dtype=np.int64)
         if n:
             order = np.argsort(frames, kind="stable")
             crops, frames = crops[order], frames[order]
@@ -347,10 +458,25 @@ class StreamingIngestor:
                     f"frames must be non-decreasing across feeds: got "
                     f"frame {int(frames[0])} after frame {self._max_frame}")
         self._n_seen += n
+        if n == 0:
+            self.stats.n_objects += n
+            return
+        self._max_frame = int(frames[-1])
+        if self._frame_stride > 1:
+            # absolute sampling grid: frame f is kept iff f % stride == 0,
+            # a function of the stream alone — dropped objects behave as
+            # if never detected (no ids, no stats beyond n_sampled_out)
+            keep = frames % self._frame_stride == 0
+            self.stats.n_sampled_out += n - int(keep.sum())
+            crops, frames = crops[keep], frames[keep]
+            if obj_ids is not None:
+                obj_ids = obj_ids[keep]
+            elif arr_pos is not None:
+                arr_pos = arr_pos[keep]
+            n = len(crops)
         self.stats.n_objects += n
         if n == 0:
             return
-        self._max_frame = int(frames[-1])
         start = 0
         while start < n:
             if self.catalog is not None \
@@ -411,29 +537,57 @@ class StreamingIngestor:
         folding every completed CNN batch."""
         t0 = time.perf_counter()
         n = len(crops)
-        if self.cfg.pixel_diff:
+        if self.cfg.pixel_diff or self._gate is not None:
             i = 0
             while i < n:
                 f = int(frames[i])
                 j = i
                 while j < n and frames[j] == f:
                     j += 1
-                roots = self._tracker.resolve(f, crops[i:j], obj_ids[i:j])
-                uniq = roots == obj_ids[i:j]
-                self._buffer_unique(crops[i:j][uniq], obj_ids[i:j][uniq],
+                ids = obj_ids[i:j]
+                if self.cfg.pixel_diff:
+                    roots = self._tracker.resolve(f, crops[i:j], ids)
+                    self.stats.n_pixel_dedup += int((roots != ids).sum())
+                else:
+                    roots = ids.copy()
+                if self._gate is not None:
+                    roots = self._gate_segment(f, crops[i:j], ids, roots)
+                uniq = roots == ids
+                self._buffer_unique(crops[i:j][uniq], ids[uniq],
                                     frames[i:j][uniq])
                 if not uniq.all():
                     dup = ~uniq
-                    self._dup_objs.append(obj_ids[i:j][dup])
+                    self._dup_objs.append(ids[dup])
                     self._dup_frames.append(frames[i:j][dup])
                     self._dup_roots.append(roots[dup])
-                    self.stats.n_pixel_dedup += int(dup.sum())
                 i = j
         else:
             self._buffer_unique(crops, obj_ids, frames)
         self.stats.wall_s += time.perf_counter() - t0
         if self.cheap_apply is not None or self.pipeline is not None:
             self._drain_ready()
+
+    def _gate_segment(self, f: int, crops: np.ndarray, ids: np.ndarray,
+                      roots: np.ndarray) -> np.ndarray:
+        """Run one frame-``f`` segment's tracker-unique crops through the
+        redundancy gate; returns the (possibly rewritten) roots. Gate
+        hits become duplicates rooted at a ring entry (a CNN-bound
+        object), misses are admitted as future ring entries."""
+        uniq = roots == ids
+        flat = crops[uniq].reshape(int(uniq.sum()),
+                                   int(np.prod(crops.shape[1:])))
+        groots = self._gate.match(f, flat)
+        hit = groots >= 0
+        if hit.any():
+            roots = roots.copy()
+            roots[np.nonzero(uniq)[0][hit]] = groots[hit]
+            self.stats.n_gate_skipped += int(hit.sum())
+            if self.cfg.pixel_diff:
+                # the tracker must see the rewritten roots, else a
+                # next-frame tracker match chains to a never-folded id
+                self._tracker.amend_last(roots)
+        self._gate.admit(flat[~hit], ids[uniq][~hit])
+        return roots
 
     def _buffer_unique(self, crops, obj_ids, frames):
         self._buf.append(crops, obj_ids, frames)
@@ -584,6 +738,9 @@ class StreamingIngestor:
         self._slot_cid = np.full(self.cfg.max_clusters, -1, np.int64)
         self._next_cid = 0
         self._tracker = _PixelTracker(self.cfg.pixel_diff_threshold)
+        self._gate = (_RedundancyGate(self.cfg.gate_threshold,
+                                      self.cfg.gate_capacity)
+                      if self.cfg.gate else None)
         self._root_cid = {}
         self._index = (self._empty_index()
                        if self.n_local_classes is not None
@@ -645,6 +802,10 @@ class StreamingIngestor:
             keep.update(self._tracker._prev_roots.tolist())
         for seg in self._dup_roots:
             keep.update(seg.tolist())
+        if self._gate is not None:
+            # gate roots can be far older than the tracker window; any
+            # ring entry may still be matched (and need its cid) later
+            keep |= self._gate.live_roots()
         self._root_cid = {r: c for r, c in self._root_cid.items()
                           if r in keep}
 

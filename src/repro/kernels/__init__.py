@@ -3,6 +3,8 @@
 centroid_assign — clustering inner loop (MXU distance + online argmin)
 topk_mask       — top-K class extraction for the ingest index
 flash_attention — blockwise fused attention for the CNN/LM backbones
+pixel_diff      — blocked pairwise crop differencing (§4.2 redundancy gate)
+frame_gate      — fused EMA + tile-diff + hot-tile motion gate (§6.1)
 
 Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd public
 wrapper), ref.py (pure-jnp oracle). Validated in interpret mode on CPU.

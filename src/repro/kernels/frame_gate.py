@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: fused frame-difference motion gate (paper §6.1).
+
+``BackgroundSubtractor`` ran three numpy passes per frame on the host:
+channel-mean abs diff against the background model, an EMA background
+update, and an (H/t, W/t) tile-mean + threshold to label hot tiles. This
+kernel fuses all three into one device pass over row blocks of the frame:
+
+    frame, bg ──► |frame - bg| channel mean ──► (t, t) tile means ──► hot
+        │
+        └──► bg' = (1 - α)·bg + α·frame          (EMA, same pass)
+
+  * the frame enters as a 2-D ``(H, W·3)`` view (channels flattened into
+    lanes) so row blocks tile cleanly; the kernel reshapes a block to
+    ``(bh, W, 3)`` for the channel mean and to ``(bh/t, t, W/t, t)`` for
+    the tile reduction — all VPU work on VMEM-resident data;
+  * α and the hot threshold enter through SMEM, so per-stream gate tuning
+    (the adaptive sampler sweeps thresholds) never recompiles;
+  * only complete tiles are labeled: the wrapper trims the hot grid to
+    ``(H//t, W//t)`` exactly like the host path trimmed
+    ``diff[:ty*t, :tx*t]`` — remainder rows/cols still get their EMA
+    update, they just belong to no tile.
+
+VMEM budget (bh=64, W=1280 → 3840 lanes, fp32): frame + bg + bg' blocks
+3·64·3840·4 = 3.8 MiB, diff/tiles scratch < 1 MiB << 16 MiB/core.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(at_ref, f_ref, bg_ref, nbg_ref, til_ref, hot_ref, *, t: int):
+    alpha = at_ref[0]
+    thr = at_ref[1]
+    f = f_ref[...].astype(jnp.float32)          # (bh, W3)
+    bg = bg_ref[...].astype(jnp.float32)
+    nbg_ref[...] = (1.0 - alpha) * bg + alpha * f
+    bh, w3 = f.shape
+    w = w3 // 3
+    d = jnp.abs(f - bg).reshape(bh, w, 3).mean(-1)            # (bh, W)
+    tiles = d.reshape(bh // t, t, w // t, t).mean((1, 3))     # (bh/t, W/t)
+    til_ref[...] = tiles
+    hot_ref[...] = (tiles > thr).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "bh", "interpret"))
+def motion_gate(at, frame2d, bg2d, *, tile: int = 8, bh: int = 64,
+                interpret: bool = True):
+    """frame2d/bg2d (H, W·3), at (2,) = (alpha, threshold) ->
+    (new_bg (H, W·3) f32, tiles (typ, txp) f32, hot (typ, txp) i32).
+
+    H is padded to a row-block multiple and W to a tile multiple (zero
+    rows/cols: their EMA output is zero and their tiles are garbage — the
+    ``ops`` wrapper trims both back to the real extent). ``bh`` must be a
+    multiple of ``tile``; the wrapper guarantees it.
+    """
+    H, W3 = frame2d.shape
+    W = W3 // 3
+    bh = min(max(bh - bh % tile, tile), (H + tile - 1) // tile * tile)
+    Hp = (H + bh - 1) // bh * bh
+    Wp = (W + tile - 1) // tile * tile
+    f = jnp.pad(frame2d.astype(jnp.float32),
+                ((0, Hp - H), (0, (Wp - W) * 3)))
+    bg = jnp.pad(bg2d.astype(jnp.float32),
+                 ((0, Hp - H), (0, (Wp - W) * 3)))
+    th, tw = bh // tile, Wp // tile
+
+    new_bg, tiles, hot = pl.pallas_call(
+        functools.partial(_kernel, t=tile),
+        grid=(Hp // bh,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda hi: (0,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((bh, Wp * 3), lambda hi: (hi, 0)),
+            pl.BlockSpec((bh, Wp * 3), lambda hi: (hi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bh, Wp * 3), lambda hi: (hi, 0)),
+            pl.BlockSpec((th, tw), lambda hi: (hi, 0)),
+            pl.BlockSpec((th, tw), lambda hi: (hi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Hp, Wp * 3), jnp.float32),
+            jax.ShapeDtypeStruct((Hp // tile, tw), jnp.float32),
+            jax.ShapeDtypeStruct((Hp // tile, tw), jnp.int32),
+        ],
+        interpret=interpret,
+    )(at, f, bg)
+    return new_bg, tiles, hot

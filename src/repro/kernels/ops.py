@@ -11,6 +11,8 @@ import jax.numpy as jnp
 
 from repro.kernels import centroid_assign as _ca
 from repro.kernels import flash_attention as _fa
+from repro.kernels import frame_gate as _fg
+from repro.kernels import pixel_diff as _pd
 from repro.kernels import topk_mask as _tk
 
 
@@ -61,6 +63,77 @@ def topk(logits, k: int, *, bb: int = 128):
     if B == 0:
         return (jnp.zeros((0, k), jnp.float32), jnp.zeros((0, k), jnp.int32))
     return _tk.topk(logits, k, bb=bb, interpret=_interpret())
+
+
+def pixel_match(a, b, threshold, *, ba: int | None = None,
+                bn: int | None = None):
+    """(Na, D), (Nb, D) -> (match (Na,) i32, min_d (Na,) f32).
+
+    ``match[i]`` is the lowest index j minimizing ``mean |a_i - b_j|``
+    when that minimum is STRICTLY below ``threshold`` (a diff exactly at
+    the threshold does not match), else -1 — the §4.2 pixel-differencing
+    decision, blocked so the (Na, Nb, D) broadcast never materializes.
+
+    Pad/trim contract: Na and Nb are padded to tile multiples — reference
+    pad rows are ``3e18`` sentinels whose mean-abs diff can never win the
+    online argmin, crop pad rows compute garbage trimmed by ``[:Na]``.
+    ``threshold`` may be a float or traced scalar (SMEM operand — sweeps
+    never recompile). ``Na == 0`` or ``Nb == 0`` short-circuits to all
+    ``-1`` (no references means nothing matches, mirroring
+    ``data.bgsub.pixel_difference``).
+    """
+    Na = a.shape[0]
+    if Na == 0 or b.shape[0] == 0:
+        return (jnp.full((Na,), -1, jnp.int32),
+                jnp.full((Na,), jnp.inf, jnp.float32))
+    interp = _interpret()
+    if ba is None:
+        ba = 4096 if interp else 128
+    if bn is None:
+        bn = 1024 if interp else 128
+    thr = jnp.asarray(threshold, jnp.float32).reshape(1)
+    return _pd.pixel_match(thr, a, b, ba=ba, bn=bn, interpret=interp)
+
+
+def motion_gate(frame, bg, alpha, threshold, *, tile: int = 8,
+                bh: int | None = None):
+    """frame/bg (H, W, 3) -> (new_bg (H, W, 3) f32, tiles (ty, tx) f32,
+    hot (ty, tx) bool) where ty = H // tile, tx = W // tile.
+
+    One fused pass per frame: EMA background update (``bg' = (1-α)bg +
+    αf`` over EVERY pixel, remainder rows/cols included), channel-mean
+    abs diff, (tile, tile) tile means over complete tiles only, and the
+    strict ``tiles > threshold`` hot mask. H is padded to a row-block
+    multiple and W to a tile multiple with zeros; padded EMA rows and
+    partial-tile columns are trimmed from the outputs. Frames smaller
+    than one tile (ty == 0 or tx == 0) short-circuit: the background
+    still updates, the tile grid is empty.
+
+    ``alpha``/``threshold`` may be floats or traced scalars (SMEM
+    operands — per-stream gate tuning never recompiles).
+    """
+    if tile < 1:
+        raise ValueError(f"tile must be >= 1, got {tile}")
+    H, W = frame.shape[:2]
+    ty, tx = H // tile, W // tile
+    at = jnp.stack([jnp.asarray(alpha, jnp.float32),
+                    jnp.asarray(threshold, jnp.float32)])
+    if ty == 0 or tx == 0:
+        a = at[0]
+        new_bg = ((1.0 - a) * bg.astype(jnp.float32)
+                  + a * frame.astype(jnp.float32))
+        return (new_bg, jnp.zeros((ty, tx), jnp.float32),
+                jnp.zeros((ty, tx), bool))
+    interp = _interpret()
+    if bh is None:
+        # interpret mode: one row block covers the frame (per-grid-step
+        # interpreter dispatch dominates); TPU: 64-row blocks
+        bh = H if interp else 64
+    new_bg, tiles, hot = _fg.motion_gate(
+        at, frame.reshape(H, W * 3), bg.reshape(H, W * 3),
+        tile=tile, bh=bh, interpret=interp)
+    return (new_bg[:H, : W * 3].reshape(H, W, 3),
+            tiles[:ty, :tx], hot[:ty, :tx] != 0)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,

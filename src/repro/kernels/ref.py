@@ -26,6 +26,43 @@ def centroid_assign_ref(feats, centroids, threshold=None):
     return mind2, j, mind2 <= jnp.float32(threshold) ** 2
 
 
+def pixel_match_ref(a, b, threshold):
+    """a (Na, D), b (Nb, D) -> (match (Na,) i32, min_d (Na,) f32).
+
+    ``match[i]`` is the index of the b row minimizing the mean absolute
+    difference against ``a_i`` (ties -> lowest index) when that minimum is
+    STRICTLY below ``threshold``, else -1 — the §4.2 pixel-differencing
+    decision of ``data.bgsub.pixel_difference``.
+    """
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    d = jnp.mean(jnp.abs(af[:, None, :] - bf[None, :, :]), axis=-1)
+    j = jnp.argmin(d, axis=1).astype(jnp.int32)
+    min_d = jnp.take_along_axis(d, j[:, None].astype(jnp.int32), 1)[:, 0]
+    return jnp.where(min_d < jnp.float32(threshold), j, -1), min_d
+
+
+def motion_gate_ref(frame, bg, alpha, threshold, tile: int):
+    """frame/bg (H, W, 3) -> (new_bg (H, W, 3) f32, tiles (ty, tx) f32,
+    hot (ty, tx) bool) with ty = H // tile, tx = W // tile.
+
+    The fused ``BackgroundSubtractor`` step: EMA background update,
+    channel-mean abs diff, (tile, tile) tile means, and the strict
+    ``tiles > threshold`` hot mask. Only complete tiles are labeled —
+    remainder rows/cols are trimmed exactly like the host path's
+    ``diff[:ty*tile, :tx*tile]``.
+    """
+    a = jnp.float32(alpha)
+    f = frame.astype(jnp.float32)
+    b = bg.astype(jnp.float32)
+    new_bg = (1.0 - a) * b + a * f
+    d = jnp.abs(f - b).mean(-1)                       # (H, W)
+    ty, tx = d.shape[0] // tile, d.shape[1] // tile
+    tiles = d[: ty * tile, : tx * tile].reshape(ty, tile, tx, tile
+                                                ).mean((1, 3))
+    return new_bg, tiles, tiles > jnp.float32(threshold)
+
+
 def topk_ref(logits, k: int):
     """logits (B, C) -> (values (B, k) f32, indices (B, k) i32), desc order."""
     v, i = jax.lax.top_k(logits.astype(jnp.float32), k)

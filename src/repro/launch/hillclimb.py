@@ -27,15 +27,120 @@ def parse_override(kv: str):
     return k, v
 
 
+def gate_tune(n_frames: int = 240, objs_per_frame: int = 4,
+              window_frames: int = 30, dup_rate: float = 0.9,
+              seed: int = 0) -> dict:
+    """Hillclimb the ingest gate: run the AdaptiveSampler against a
+    static-camera synthetic stream, window by window, probing recall vs.
+    ungated ingest at every step (the recall gate). Returns the stride /
+    duplicate-rate / recall trajectory plus the final operating point.
+    """
+    import numpy as np
+
+    from repro.core.ingest import IngestConfig, ingest
+    from repro.core.params import AdaptiveSampler, SamplerConfig
+    from repro.core.streaming import StreamingIngestor
+
+    rng = np.random.default_rng(seed)
+    n_classes, feat = 5, 16
+    base = rng.random((8, 16, 16, 3)).astype(np.float32)
+
+    def cheap(crops):
+        b = len(crops)
+        cls = (crops[:, 0, 0, 0] * n_classes).astype(int) % n_classes
+        probs = np.eye(n_classes, dtype=np.float32)[cls] * 0.9 + 0.02
+        feats = np.zeros((b, feat), np.float32)
+        feats[np.arange(b), cls % feat] = 1.0
+        return probs, feats
+
+    crops, frames = [], []
+    for f in range(n_frames):
+        for k in rng.choice(len(base), objs_per_frame, replace=False):
+            c = base[k]
+            if rng.random() > dup_rate:      # fresh content, not a dup
+                c = rng.random(c.shape).astype(np.float32)
+            crops.append(c)
+            frames.append(f)
+    crops = np.stack(crops)
+    frames = np.array(frames, np.int64)
+
+    cfg = IngestConfig(K=3, batch_size=64, gate=True, gate_threshold=0.01)
+    idx_un, _ = ingest(crops, frames, cheap, 1.0, cfg, n_local_classes=n_classes)
+
+    def frames_by_class(idx):
+        return {c: set(np.asarray(idx.frames_of(idx.lookup(c))).tolist())
+                for c in range(n_classes)}
+
+    ref = frames_by_class(idx_un)
+    sampler = AdaptiveSampler(SamplerConfig())
+    ing = StreamingIngestor(cheap, 1.0, cfg, n_local_classes=n_classes)
+    steps = []
+    for lo in range(0, n_frames, window_frames):
+        sel = (frames >= lo) & (frames < lo + window_frames)
+        before = (ing.stats.n_cnn_invocations, ing.stats.n_pixel_dedup,
+                  ing.stats.n_gate_skipped, ing.stats.n_sampled_out)
+        ing.feed(crops[sel], frames[sel])
+        ing.flush()
+        # recall probe vs ungated ingest, over everything fed so far
+        got = frames_by_class(ing.index)
+        hits = sum(len(got[c] & ref[c]) for c in range(n_classes))
+        denom = sum(len({f for f in ref[c] if f < lo + window_frames})
+                    for c in range(n_classes))
+        recall = hits / denom if denom else 1.0
+        ingested = ing.stats.n_cnn_invocations - before[0]
+        skipped = (ing.stats.n_pixel_dedup + ing.stats.n_gate_skipped
+                   + ing.stats.n_sampled_out
+                   - before[1] - before[2] - before[3])
+        stride = sampler.observe(ingested, skipped, recall=recall)
+        ing.set_frame_stride(stride)
+        steps.append({"window_lo": lo, "stride": stride,
+                      "ingested": int(ingested), "skipped": int(skipped),
+                      "recall": round(recall, 4)})
+    idx, stats = ing.finish()
+    return {
+        "mode": "gate_tune",
+        "n_objects": int(stats.n_objects),
+        "n_cnn_invocations": int(stats.n_cnn_invocations),
+        "n_pixel_dedup": int(stats.n_pixel_dedup),
+        "n_gate_skipped": int(stats.n_gate_skipped),
+        "n_sampled_out": int(stats.n_sampled_out),
+        "final_stride": sampler.stride,
+        "steps": steps,
+        "ok": True,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--cell", default=None, help="arch:shape")
     ap.add_argument("--set", nargs="*", default=[], dest="overrides")
     ap.add_argument("--variant", default=None)
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--gate", action="store_true",
+                    help="tune the ingest redundancy gate / frame stride "
+                         "with the AdaptiveSampler instead of re-lowering "
+                         "a model cell")
     ap.add_argument("--tag", default="exp")
     ap.add_argument("--out", default="experiments/hillclimb")
     args = ap.parse_args()
+
+    if args.gate:
+        rec = gate_tune()
+        os.makedirs(args.out, exist_ok=True)
+        path = os.path.join(args.out, f"gate_{args.tag}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        last = rec["steps"][-1] if rec["steps"] else {}
+        print(f"gate tune: objects={rec['n_objects']} "
+              f"cnn={rec['n_cnn_invocations']} "
+              f"gate_skipped={rec['n_gate_skipped']} "
+              f"sampled_out={rec['n_sampled_out']} "
+              f"final_stride={rec['final_stride']} "
+              f"last_recall={last.get('recall')}")
+        print(f"wrote {path}")
+        return
+    if args.cell is None:
+        ap.error("--cell is required unless --gate is given")
 
     from repro.launch.dryrun import run_cell
 

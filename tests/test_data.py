@@ -116,3 +116,117 @@ def test_object_chunks_rejects_bad_window():
     vs = get_stream("oxford", duration_s=10)
     with pytest.raises(ValueError):
         next(vs.object_chunks(chunk_frames=0))
+
+
+# ---------------------------------------------------------------------------
+# blocked pixel_difference + hardened BackgroundSubtractor (PR 6)
+# ---------------------------------------------------------------------------
+
+def _dense_pixel_difference(crops_a, crops_b, threshold):
+    """The original all-pairs broadcast, kept as the blocked path's oracle."""
+    a = crops_a.reshape(len(crops_a), -1)
+    b = crops_b.reshape(len(crops_b), -1)
+    d = np.abs(a[:, None, :] - b[None, :, :]).mean(-1)
+    j = d.argmin(1)
+    return np.where(d[np.arange(len(a)), j] < threshold, j, -1)
+
+
+def test_pixel_difference_blocked_equals_dense(monkeypatch):
+    """Force multiple row blocks; the blocked result must equal the old
+    dense broadcast exactly (argmin ties included)."""
+    from repro.data import bgsub
+    monkeypatch.setattr(bgsub, "_BLOCK_ELEMS", 7 * 48)   # ~1 row per block
+    rng = np.random.default_rng(0)
+    a = rng.random((23, 4, 4, 3)).astype(np.float32)
+    b = rng.random((7, 4, 4, 3)).astype(np.float32)
+    b[2] = a[5]
+    b[3] = b[2]                 # duplicate ref: tie must break low
+    got = bgsub.pixel_difference(a, b, 0.1, backend="numpy")
+    np.testing.assert_array_equal(got, _dense_pixel_difference(a, b, 0.1))
+    assert got[5] == 2
+
+
+def test_pixel_difference_threshold_strict():
+    a = np.zeros((1, 2, 2, 3), np.float32)
+    b = np.full((1, 2, 2, 3), 0.5, np.float32)
+    assert pixel_difference(a, b, 0.5)[0] == -1          # d == thr: no match
+    assert pixel_difference(a, b, 0.500001)[0] == 0
+
+
+def test_pixel_difference_kernel_backend_matches_numpy():
+    rng = np.random.default_rng(1)
+    a = rng.random((31, 8, 8, 3)).astype(np.float32)
+    b = rng.random((17, 8, 8, 3)).astype(np.float32)
+    b[4] = a[9] + 1e-4
+    mk = pixel_difference(a, b, 0.02, backend="kernel")
+    mn = pixel_difference(a, b, 0.02, backend="numpy")
+    np.testing.assert_array_equal(mk, mn)
+    assert mk[9] == 4
+
+
+def test_pixel_difference_rejects_unknown_backend():
+    a = np.zeros((1, 2, 2, 3), np.float32)
+    with pytest.raises(ValueError):
+        pixel_difference(a, a, 0.1, backend="gpu")
+
+
+def test_bgsub_frame_smaller_than_one_tile():
+    """ty == 0 / tx == 0 must yield [] (not crash or mislabel), while the
+    background model still tracks the stream."""
+    bs = BackgroundSubtractor(tile=8)
+    r = np.random.default_rng(0)
+    f0 = r.random((4, 40, 3)).astype(np.float32)          # ty == 0
+    assert bs(f0) == []
+    assert bs(np.ones_like(f0)) == []
+    assert bs._bg is not None and bs._bg.shape == f0.shape
+    bs2 = BackgroundSubtractor(tile=8)
+    g0 = r.random((40, 5, 3)).astype(np.float32)          # tx == 0
+    assert bs2(g0) == []
+    assert bs2(np.ones_like(g0)) == []
+
+
+def test_bgsub_non_multiple_resolution_labels_complete_tiles():
+    """Boxes never extend past the last complete tile on a 70x51 frame."""
+    bs = BackgroundSubtractor(tile=8, min_tiles=1, threshold=0.05)
+    base = np.zeros((70, 51, 3), np.float32)
+    bs(base)
+    hot = base.copy()
+    hot[8:32, 8:32] = 1.0
+    boxes = bs(hot)
+    assert boxes
+    for b in boxes:
+        assert b.y1 <= (70 // 8) * 8 and b.x1 <= (51 // 8) * 8
+
+
+def test_bgsub_constant_stream_stays_silent():
+    bs = BackgroundSubtractor(tile=8, min_tiles=1)
+    f = np.full((64, 64, 3), 0.3, np.float32)
+    assert all(bs(f.copy()) == [] for _ in range(5))
+
+
+def test_bgsub_components_vectorized_equals_bfs():
+    """The iterative min-label propagation returns the same boxes in the
+    same order as the reference BFS, over random hot grids."""
+    bs = BackgroundSubtractor(tile=8)
+    rng = np.random.default_rng(0)
+    for density in (0.1, 0.3, 0.5, 0.8):
+        for _ in range(10):
+            hot = rng.random((9, 13)) < density
+            assert bs._components(hot) == bs._components_bfs(hot)
+    # degenerate grids
+    assert bs._components(np.zeros((5, 5), bool)) == []
+    assert bs._components(np.ones((1, 1), bool)) == \
+        bs._components_bfs(np.ones((1, 1), bool))
+
+
+def test_bgsub_kernel_backend_matches_numpy():
+    """Same stream through both backends -> identical boxes every frame."""
+    rng = np.random.default_rng(3)
+    frames = [rng.random((48, 56, 3)).astype(np.float32) for _ in range(4)]
+    frames.append(frames[-1].copy())
+    frames[2][8:24, 16:40] += 0.5
+    bn = BackgroundSubtractor(tile=8, min_tiles=1, backend="numpy")
+    bk = BackgroundSubtractor(tile=8, min_tiles=1, backend="kernel")
+    for f in frames:
+        assert bn(f.copy()) == bk(f.copy())
+    np.testing.assert_allclose(bn._bg, np.asarray(bk._bg), atol=1e-5)

@@ -211,3 +211,163 @@ def test_flash_attention_matches_model_attention():
                                   attn_impl="flash")
     np.testing.assert_allclose(np.asarray(out_e), np.asarray(out_f),
                                atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# pixel_match
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Na,Nb,D", [
+    (1, 1, 8), (7, 13, 48), (37, 19, 300), (64, 64, 192), (130, 257, 96),
+])
+def test_pixel_match_matches_ref(Na, Nb, D):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(Na * Nb + D))
+    a = jax.random.uniform(k1, (Na, D))
+    b = jax.random.uniform(k2, (Nb, D))
+    m, d = ops.pixel_match(a, b, 0.2)
+    mr, dr = ref.pixel_match_ref(a, b, 0.2)
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(mr))
+    np.testing.assert_allclose(np.asarray(d), np.asarray(dr), atol=1e-6)
+
+
+@pytest.mark.parametrize("ba,bn", [(8, 8), (32, 16), (16, 64), (128, 128)])
+def test_pixel_match_block_shapes(ba, bn):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a = jax.random.uniform(k1, (100, 96))
+    b = jax.random.uniform(k2, (77, 96))
+    m, d = ops.pixel_match(a, b, 0.25, ba=ba, bn=bn)
+    mr, dr = ref.pixel_match_ref(a, b, 0.25)
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(mr))
+    np.testing.assert_allclose(np.asarray(d), np.asarray(dr), atol=1e-6)
+
+
+def test_pixel_match_exact_duplicate_wins():
+    rng = np.random.default_rng(0)
+    a = rng.random((9, 64)).astype(np.float32)
+    b = rng.random((5, 64)).astype(np.float32)
+    b[3] = a[6]                              # exact duplicate
+    m, d = ops.pixel_match(a, b, 1e-6)
+    assert int(np.asarray(m)[6]) == 3
+    assert float(np.asarray(d)[6]) == 0.0
+
+
+def test_pixel_match_threshold_is_strict():
+    """A min diff exactly AT the threshold must not match (host
+    pixel_difference contract: < threshold, not <=)."""
+    a = np.zeros((1, 16), np.float32)
+    b = np.full((1, 16), 0.5, np.float32)    # mean abs diff exactly 0.5
+    m, _ = ops.pixel_match(a, b, 0.5)
+    assert int(np.asarray(m)[0]) == -1
+    m, _ = ops.pixel_match(a, b, np.nextafter(np.float32(0.5),
+                                              np.float32(1.0)))
+    assert int(np.asarray(m)[0]) == 0
+
+
+def test_pixel_match_tie_breaks_to_lowest_index():
+    a = np.full((3, 8), 0.25, np.float32)
+    b = np.stack([np.full(8, 0.5, np.float32)] * 4)   # all refs equidistant
+    m, _ = ops.pixel_match(a, b, 1.0)
+    np.testing.assert_array_equal(np.asarray(m), 0)
+
+
+def test_pixel_match_empty_inputs():
+    m, d = ops.pixel_match(np.zeros((0, 8), np.float32),
+                           np.ones((3, 8), np.float32), 0.1)
+    assert m.shape == (0,) and d.shape == (0,)
+    m, d = ops.pixel_match(np.ones((3, 8), np.float32),
+                           np.zeros((0, 8), np.float32), 0.1)
+    assert (np.asarray(m) == -1).all()
+    assert np.isinf(np.asarray(d)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 30), st.integers(1, 30), st.data())
+def test_pixel_match_property(Na, Nb, data):
+    D = data.draw(st.sampled_from([8, 33, 100]))
+    thr = data.draw(st.floats(0.01, 0.5))
+    k1, k2 = jax.random.split(jax.random.PRNGKey(Na * 31 + Nb))
+    a = jax.random.uniform(k1, (Na, D))
+    b = jax.random.uniform(k2, (Nb, D))
+    m, d = ops.pixel_match(a, b, thr)
+    mr, dr = ref.pixel_match_ref(a, b, thr)
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(mr))
+    np.testing.assert_allclose(np.asarray(d), np.asarray(dr), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# motion_gate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("H,W,tile", [
+    (8, 8, 8), (64, 64, 8), (70, 51, 8), (128, 128, 16), (33, 95, 8),
+    (16, 24, 4),
+])
+def test_motion_gate_matches_ref(H, W, tile):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(H * W + tile))
+    f = jax.random.uniform(k1, (H, W, 3))
+    bg = jax.random.uniform(k2, (H, W, 3))
+    nb, t, h = ops.motion_gate(f, bg, 0.05, 0.08, tile=tile)
+    nbr, tr, hr = ref.motion_gate_ref(f, bg, 0.05, 0.08, tile)
+    assert nb.shape == (H, W, 3)
+    assert t.shape == (H // tile, W // tile)
+    np.testing.assert_allclose(np.asarray(nb), np.asarray(nbr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(t), np.asarray(tr), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(hr))
+    assert np.asarray(h).dtype == np.bool_
+
+
+@pytest.mark.parametrize("bh", [8, 16, 64, 256])
+def test_motion_gate_row_block_sweep(bh):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    f = jax.random.uniform(k1, (100, 40, 3))
+    bg = jax.random.uniform(k2, (100, 40, 3))
+    nb, t, h = ops.motion_gate(f, bg, 0.1, 0.05, tile=8, bh=bh)
+    nbr, tr, hr = ref.motion_gate_ref(f, bg, 0.1, 0.05, 8)
+    np.testing.assert_allclose(np.asarray(nb), np.asarray(nbr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(t), np.asarray(tr), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(hr))
+
+
+def test_motion_gate_smaller_than_one_tile():
+    """ty == 0 or tx == 0: empty tile grid, background still updates."""
+    f = np.full((4, 20, 3), 1.0, np.float32)
+    bg = np.zeros((4, 20, 3), np.float32)
+    nb, t, h = ops.motion_gate(f, bg, 0.5, 0.01, tile=8)
+    assert t.shape == (0, 2) and h.shape == (0, 2)
+    np.testing.assert_allclose(np.asarray(nb), 0.5, atol=1e-7)
+    nb, t, h = ops.motion_gate(f[:, :4], bg[:, :4], 0.5, 0.01, tile=8)
+    assert t.shape == (0, 0) and h.shape == (0, 0)
+
+
+def test_motion_gate_static_frame_is_cold():
+    """frame == bg -> zero diff everywhere, no hot tiles, bg unchanged."""
+    f = np.random.default_rng(0).random((48, 48, 3)).astype(np.float32)
+    nb, t, h = ops.motion_gate(f, f, 0.05, 0.0, tile=8)
+    np.testing.assert_allclose(np.asarray(nb), f, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(t), 0.0, atol=1e-7)
+    assert not np.asarray(h).any()   # strict >: exactly-zero is not hot
+
+
+def test_motion_gate_threshold_is_strict():
+    f = np.full((8, 8, 3), 0.5, np.float32)
+    bg = np.zeros((8, 8, 3), np.float32)     # every tile mean is exactly 0.5
+    _, _, h = ops.motion_gate(f, bg, 0.0, 0.5, tile=8)
+    assert not np.asarray(h).any()
+    _, _, h = ops.motion_gate(f, bg, 0.0, 0.4999, tile=8)
+    assert np.asarray(h).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 80), st.integers(1, 80), st.data())
+def test_motion_gate_property(H, W, data):
+    tile = data.draw(st.sampled_from([4, 8, 16]))
+    alpha = data.draw(st.floats(0.0, 1.0))
+    thr = data.draw(st.floats(0.0, 0.3))
+    k1, k2 = jax.random.split(jax.random.PRNGKey(H * 97 + W))
+    f = jax.random.uniform(k1, (H, W, 3))
+    bg = jax.random.uniform(k2, (H, W, 3))
+    nb, t, h = ops.motion_gate(f, bg, alpha, thr, tile=tile)
+    nbr, tr, hr = ref.motion_gate_ref(f, bg, alpha, thr, tile)
+    np.testing.assert_allclose(np.asarray(nb), np.asarray(nbr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(t), np.asarray(tr), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(hr))

@@ -75,3 +75,59 @@ def test_sweep_end_to_end_monotonic_recall_in_K():
     by_k_cost = {e.candidate.K: e.query_flops for e in evals}
     cost = [by_k_cost[k] for k in ks]
     assert all(cost[i] <= cost[i + 1] + 1e-9 for i in range(len(cost) - 1))
+
+
+# ---------------------------------------------------------------------------
+# adaptive frame sampler (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def _sampler(**kw):
+    from repro.core.params import AdaptiveSampler, SamplerConfig
+    return AdaptiveSampler(SamplerConfig(**kw))
+
+
+def test_sampler_additive_increase_on_redundancy():
+    s = _sampler(max_stride=5)
+    for want in (2, 3, 4, 5, 5):            # +1 per window, capped at max
+        assert s.observe(n_ingested=10, n_skipped=90) == want
+
+
+def test_sampler_multiplicative_decrease_on_fresh_content():
+    s = _sampler(max_stride=30)
+    for _ in range(11):
+        s.observe(10, 90)
+    assert s.stride == 12
+    assert s.observe(90, 10) == 6           # halves, not -1
+    assert s.observe(90, 10) == 3
+    assert s.observe(90, 10) == 1
+    assert s.observe(90, 10) == 1           # floored at min_stride
+
+
+def test_sampler_hysteresis_band_holds():
+    s = _sampler()
+    s.observe(10, 90)
+    assert s.stride == 2
+    for _ in range(5):                      # dup_rate inside (low, high)
+        assert s.observe(35, 65) == 2
+    assert s.observe(0, 0) == 2             # empty window: hold
+
+
+def test_sampler_recall_gate_collapses_stride():
+    s = _sampler(recall_floor=0.97)
+    for _ in range(6):
+        s.observe(10, 90)
+    assert s.stride == 7
+    # a passing probe does not interfere with the AIMD step
+    assert s.observe(10, 90, recall=0.99) == 8
+    # a failing probe collapses immediately, ignoring the duplicate rate
+    assert s.observe(10, 90, recall=0.96) == 1
+
+
+def test_sampler_rejects_bad_bounds():
+    from repro.core.params import AdaptiveSampler, SamplerConfig
+    with pytest.raises(ValueError):
+        AdaptiveSampler(SamplerConfig(min_stride=0))
+    with pytest.raises(ValueError):
+        AdaptiveSampler(SamplerConfig(min_stride=5, max_stride=2))
+    with pytest.raises(ValueError):
+        AdaptiveSampler(SamplerConfig(dup_low=0.9, dup_high=0.5))

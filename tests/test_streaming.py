@@ -52,10 +52,12 @@ def test_streaming_equals_oneshot_byte_identical(data):
     seed = data.draw(st.integers(0, 10_000), label="seed")
     n = data.draw(st.integers(0, 400), label="n")
     batch_size = data.draw(st.sampled_from([32, 64, 100]), label="batch")
+    gate = data.draw(st.booleans(), label="gate")
+    stride = data.draw(st.sampled_from([1, 1, 2, 3]), label="stride")
     crops, frames = _stream(seed, n)
     cfg = IngestConfig(K=2, threshold=1.5, max_clusters=24,
                        batch_size=batch_size, high_water=0.8,
-                       evict_frac=0.5)
+                       evict_frac=0.5, gate=gate, frame_stride=stride)
 
     one_index, one_stats = ingest(crops, frames, _cheap, 1e9, cfg)
 
@@ -108,6 +110,155 @@ def test_multi_stream_runner_matches_self_driven(seed):
     for name in streams:
         idx, _ = finished[name]
         assert _save_bytes(idx, name) == _save_bytes(solo[name], name + "s")
+
+
+# ---------------------------------------------------------------------------
+# redundancy gate: gated == ungated on exact-duplicate streams
+# ---------------------------------------------------------------------------
+
+def _exact_stream(seed, n, n_modes=8, n_frames=None):
+    """Stream where every duplicate is an EXACT copy of one of ``n_modes``
+    base crops — threshold-safe for the gate, so gated ingest must lose
+    nothing relative to ungated."""
+    r = np.random.default_rng(seed)
+    n_frames = n_frames or max(n // 5, 2)
+    modes = r.random((n_modes, 6, 6, 3)).astype(np.float32)
+    pick = r.integers(0, n_modes, n)
+    crops = modes[pick].copy()
+    frames = np.sort(r.integers(0, n_frames, n))
+    return crops, frames
+
+
+def _frames_by_class(index):
+    return {c: sorted(np.asarray(index.frames_of(index.lookup(c))).tolist())
+            for c in range(N_CLASSES)}
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.data())
+def test_gated_equals_ungated_on_exact_duplicate_streams(data):
+    """The gate's correctness contract: on a stream whose duplicates are
+    exact, gated ingest answers every class query with the same frames as
+    ungated ingest (attach-instead-of-fold loses nothing), while spending
+    strictly fewer CNN invocations — and the gated run itself is
+    chunk-invariant (byte-identical to one-shot gated)."""
+    seed = data.draw(st.integers(0, 10_000), label="seed")
+    n = data.draw(st.integers(1, 300), label="n")
+    crops, frames = _exact_stream(seed, n)
+    base = dict(K=2, threshold=1.5, max_clusters=64, batch_size=32)
+
+    idx_un, st_un = ingest(crops, frames, _cheap, 1e9,
+                           IngestConfig(**base, gate=False),
+                           n_local_classes=N_CLASSES)
+    gcfg = IngestConfig(**base, gate=True, gate_threshold=0.01)
+    idx_g, st_g = ingest(crops, frames, _cheap, 1e9, gcfg,
+                         n_local_classes=N_CLASSES)
+
+    assert _frames_by_class(idx_g) == _frames_by_class(idx_un)
+    assert idx_g.n_objects == idx_un.n_objects == n
+    assert st_g.n_cnn_invocations <= st_un.n_cnn_invocations
+
+    # chunk invariance of the gated run (ring admission is deferred to
+    # frame close, so chunk boundaries can't change what the gate sees)
+    ing = StreamingIngestor(_cheap, 1e9, gcfg, n_local_classes=N_CLASSES)
+    rest_c, rest_f = crops, frames
+    for size in _chunks(data.draw, n):
+        ing.feed(rest_c[:size], rest_f[:size])
+        rest_c, rest_f = rest_c[size:], rest_f[size:]
+        ing.flush()
+    chunk_idx, chunk_stats = ing.finish()
+    assert _save_bytes(chunk_idx, "g") == _save_bytes(idx_g, "go")
+    assert chunk_stats.n_gate_skipped == st_g.n_gate_skipped
+
+
+def test_gate_chunk_invariance_across_shard_rollovers():
+    """Every shard sealed by a gated rolling ingestor is byte-identical to
+    a one-shot gated ingest of exactly its window — the gate ring must be
+    reset at each seal, never leak across shards."""
+    import os
+    import tempfile
+
+    from repro.core.archive import ShardCatalog
+
+    crops, frames = _exact_stream(7, 260)
+    cfg = IngestConfig(K=2, threshold=1.5, max_clusters=64, batch_size=32,
+                       gate=True, gate_threshold=0.01)
+    with tempfile.TemporaryDirectory() as d:
+        catalog = ShardCatalog.open(os.path.join(d, "arch"))
+        ing = StreamingIngestor(_cheap, 1e9, cfg, catalog=catalog,
+                                shard_objects=90)
+        for start in range(0, len(crops), 70):
+            ing.feed(crops[start:start + 70], frames[start:start + 70])
+            ing.flush()
+        ing.finish()
+
+        def _file_bytes(prefix):
+            return tuple(open(prefix + ext, "rb").read()
+                         for ext in (".json", ".npz"))
+
+        bases = [m.obj_base for m in catalog] + [len(crops)]
+        assert len(catalog) == -(-len(crops) // 90)
+        for i, m in enumerate(catalog):
+            lo, hi = bases[i], bases[i + 1]
+            one, _ = ingest(crops[lo:hi], frames[lo:hi], _cheap, 1e9, cfg)
+            p = os.path.join(d, "one")
+            one.save(p)
+            assert _file_bytes(os.path.join(catalog.root, m.path)) \
+                == _file_bytes(p), f"gated shard {m.shard_id} != window"
+
+
+def test_gate_attaches_duplicate_chains_to_root_cluster():
+    """Regression for gate/tracker transitivity: a gate hit must rewrite
+    the tracker's view of the frame (``amend_last``) so that a
+    *consecutive-frame* duplicate of a gate-matched crop still resolves to
+    the original root — otherwise its frame is attached to a root that
+    never reached a cluster and the object is silently lost."""
+    r = np.random.default_rng(0)
+    a = r.random((6, 6, 3)).astype(np.float32)
+    crops = np.stack([a, a, a])            # frames 0, 2, 3: blink then chain
+    frames = np.array([0, 2, 3], np.int64)
+    cfg = IngestConfig(K=2, threshold=1.5, max_clusters=16, batch_size=8,
+                       gate=True, gate_threshold=0.01)
+    index, stats = ingest(crops, frames, _cheap, 1e9, cfg)
+    assert stats.n_cnn_invocations == 1    # tracker misses 0->2, gate hits
+    assert stats.n_gate_skipped >= 1
+    assert index.n_objects == 3
+    assert index.n_clusters == 1
+    cid = int(index.store.row_cids[0])
+    assert sorted(np.asarray(index.frames_of([cid])).tolist()) == [0, 2, 3]
+
+
+def test_frame_stride_equals_prefiltered_stream():
+    """``frame_stride=s`` must be exactly equivalent to pre-filtering the
+    stream to frames divisible by s (absolute grid, chunk-invariant) —
+    byte-identical indexes, with the dropped arrivals counted."""
+    crops, frames = _exact_stream(3, 200, n_frames=60)
+    base = dict(K=2, threshold=1.5, max_clusters=64, batch_size=32)
+    strided, st_s = ingest(crops, frames, _cheap, 1e9,
+                           IngestConfig(**base, frame_stride=3))
+    keep = frames % 3 == 0
+    pre, _ = ingest(crops[keep], frames[keep], _cheap, 1e9,
+                    IngestConfig(**base))
+    assert _save_bytes(strided, "s3") == _save_bytes(pre, "pre")
+    assert st_s.n_sampled_out == int((~keep).sum())
+    assert st_s.n_objects == int(keep.sum())
+
+
+def test_stride_validation_and_mid_run_change():
+    with pytest.raises(ValueError):
+        StreamingIngestor(_cheap, 1e9, IngestConfig(frame_stride=0))
+    ing = StreamingIngestor(_cheap, 1e9, IngestConfig(batch_size=8))
+    with pytest.raises(ValueError):
+        ing.set_frame_stride(0)
+    assert ing.frame_stride == 1
+    ing.set_frame_stride(4)
+    assert ing.frame_stride == 4
+    crops, frames = _exact_stream(5, 40, n_frames=20)
+    ing.feed(crops, frames)
+    index, stats = ing.finish()
+    keep = int((frames % 4 == 0).sum())
+    assert stats.n_sampled_out == len(crops) - keep
+    assert index.n_objects == keep
 
 
 # ---------------------------------------------------------------------------
