@@ -144,6 +144,8 @@ def run_e2e() -> dict:
         def apply(batch):
             probs, feats = base(batch)
             vals, idxs = kops.topk(jnp.asarray(probs), cfg.K)
+            # focuslint: disable=host-sync -- bench records top-K on
+            # host; the sync is the measured staged-path cost
             topk_out.append((np.asarray(vals), np.asarray(idxs)))
             return probs, feats
 

@@ -1,0 +1,28 @@
+"""focuslint — static invariant checks for the jit/Pallas hot paths.
+
+Focus's cost claims rest on hot-path discipline that runtime tests catch
+late and reviewers miss as the tree grows: no stray host syncs inside the
+fused dispatch loop, no reads of donated device buffers, every Pallas
+kernel pinned to a pure-jnp oracle, every centroid/prob mutation bumping
+the ``(cid, version)`` cache key. This package enforces those invariants
+at review time with a lightweight AST pass (no imports, no execution):
+
+* ``host-sync`` / ``retrace-hazard`` — device syncs and per-value retrace
+  hazards in functions reachable from a ``jax.jit`` / ``pl.pallas_call``
+  (DESIGN.md §11.1);
+* ``donated-read``  — reads of a buffer after it was donated to a jitted
+  call (§11.2);
+* ``kernel-*`` / ``pallas-outside-kernels`` — the kernel contract: oracle
+  in ``ref.py``, pad/trim wrapper in ``ops.py``, exact-equality test in
+  ``tests/test_kernels.py`` (§11.3);
+* ``cache-version`` — ClusterStore mutations must bump ``versions``
+  (§11.4).
+
+CLI: ``python -m repro.analysis [paths...]`` — see ``--help``.
+Suppress a finding inline with
+``# focuslint: disable=<rule>[,<rule>] -- <justification>``.
+"""
+from repro.analysis.report import Finding
+from repro.analysis.runner import run_analysis
+
+__all__ = ["Finding", "run_analysis"]

@@ -1,0 +1,728 @@
+"""Project-wide symbol/call-graph index for the focuslint rules.
+
+Pure-AST (nothing is imported or executed).  The index answers three
+questions the rules need:
+
+* what does a ``Call`` resolve to — a ``jax.jit``-wrapped callable (with
+  its donate/static configuration), a project function, a Pallas
+  ``pallas_call``, or an extern like ``numpy.asarray``;
+* which functions are DEVICE code (traced: reachable *from* a jit root
+  or a Pallas kernel body) vs DISPATCHERS (host hot path: transitively
+  *calling* a jitted callable);
+* which project functions are *device-returning* (their results carry
+  un-synced device buffers), so host-side coercions of those results can
+  be flagged without drowning in false positives.
+
+Resolution is deliberately shallow: module aliases, ``from`` imports,
+module-level ``NAME = jax.jit(...)`` / dict-of-function bindings,
+decorators (incl. ``functools.partial(jax.jit, ...)``), local
+``fn = factory(...)`` bindings where the factory's returns are jit
+values, and ``self.NAME = ...`` bindings collected across a class's
+methods.  Anything unresolved is simply not flagged.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.astutil import (Chain, assign_target_chains, call_name,
+                                    const_int_set, const_str_tuple, dotted,
+                                    loads_in)
+
+HOST_COERCIONS = {"builtins.int", "builtins.float", "builtins.bool",
+                  "numpy.asarray", "numpy.array", "jax.device_get"}
+JIT_EXTERNS = {"jax.jit"}
+PARTIAL_EXTERNS = {"functools.partial", "partial"}
+
+# Method calls whose results are host-side metadata even when the
+# receiver holds device buffers: the AOT lowering/introspection API, and
+# block_until_ready (the sanctioned sync point — its result is already
+# landed, so a following np.asarray is a copy, not a stall).
+HOST_RESULT_ATTRS = {"lower", "compile", "cost_analysis",
+                     "memory_analysis", "as_text", "compiler_ir",
+                     "block_until_ready", "item"}
+
+# jax.* externs whose results are NOT device data (callables, shape
+# structs, backend introspection).
+_JAX_HOST_EXTERNS = {"jax.jit", "jax.device_get", "jax.eval_shape",
+                     "jax.ShapeDtypeStruct", "jax.devices",
+                     "jax.local_devices", "jax.device_count",
+                     "jax.local_device_count", "jax.default_backend",
+                     "jax.grad", "jax.value_and_grad", "jax.vmap",
+                     "jax.pmap", "jax.checkpoint", "jax.named_scope",
+                     "jax.debug.print"}
+
+
+@dataclass
+class JitInfo:
+    donate: Set[int] = field(default_factory=set)
+    static_nums: Set[int] = field(default_factory=set)
+    static_names: Set[str] = field(default_factory=set)
+    targets: Set[str] = field(default_factory=set)   # inner func qualnames
+
+    def merge(self, other: "JitInfo") -> "JitInfo":
+        return JitInfo(self.donate | other.donate,
+                       self.static_nums | other.static_nums,
+                       self.static_names | other.static_names,
+                       self.targets | other.targets)
+
+
+@dataclass
+class Value:
+    """A statically-resolved callable binding."""
+    kind: str                      # 'func' | 'jit' | 'set'
+    targets: Set[str] = field(default_factory=set)
+    jit: Optional[JitInfo] = None
+
+
+@dataclass
+class CallClass:
+    kind: str                      # 'jit'|'func'|'pallas'|'extern'|'unknown'
+    jit: Optional[JitInfo] = None
+    targets: Set[str] = field(default_factory=set)
+    extern: Optional[str] = None
+
+
+@dataclass
+class FuncInfo:
+    qualname: str
+    name: str
+    module: "ModuleInfo"
+    node: ast.AST
+    class_name: Optional[str] = None
+    parent: Optional[str] = None          # enclosing function qualname
+    def_lines: Tuple[int, ...] = ()
+    env: Dict[str, Value] = field(default_factory=dict)
+    jit_sites: List[Tuple[ast.Call, JitInfo]] = field(default_factory=list)
+    has_pallas: bool = False
+    callees: Set[str] = field(default_factory=set)
+
+    @property
+    def params(self) -> List[str]:
+        a = self.node.args
+        names = [p.arg for p in a.posonlyargs + a.args]
+        return names
+
+
+@dataclass
+class ModuleInfo:
+    modname: str
+    path: str
+    tree: ast.Module
+    source: str
+    aliases: Dict[str, str] = field(default_factory=dict)       # import x as y
+    from_imports: Dict[str, Tuple[str, str]] = field(default_factory=dict)
+    symbols: Dict[str, Value] = field(default_factory=dict)
+    functions: Dict[str, FuncInfo] = field(default_factory=dict)  # by qualname
+    self_attrs: Dict[str, Dict[str, Value]] = field(default_factory=dict)
+    kernel_roots: Set[str] = field(default_factory=set)
+
+    @property
+    def in_tests(self) -> bool:
+        parts = self.path.replace(os.sep, "/").split("/")
+        return "tests" in parts
+
+    @property
+    def in_kernels(self) -> bool:
+        parts = self.path.replace(os.sep, "/").split("/")
+        return "kernels" in parts
+
+
+def modname_for(path: str) -> str:
+    norm = os.path.normpath(path).replace(os.sep, "/")
+    parts = [p for p in norm.split("/") if p not in (".", "")]
+    if "src" in parts:
+        parts = parts[parts.index("src") + 1:]
+    if parts and parts[-1].endswith(".py"):
+        parts[-1] = parts[-1][:-3]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+class ProjectIndex:
+    def __init__(self, files: Sequence[Tuple[str, str]]):
+        """files: (path, source) pairs; paths are repo-relative."""
+        self.modules: Dict[str, ModuleInfo] = {}
+        self.funcs: Dict[str, FuncInfo] = {}
+        self.parse_errors: List[Tuple[str, str]] = []
+        self.device_funcs: Set[str] = set()
+        self.dispatchers: Set[str] = set()
+        self.device_returning: Set[str] = set()
+        self._factories: Dict[str, JitInfo] = {}
+        for path, source in files:
+            try:
+                tree = ast.parse(source, filename=path)
+            except SyntaxError as e:
+                self.parse_errors.append((path, str(e)))
+                continue
+            mod = ModuleInfo(modname=modname_for(path), path=path,
+                             tree=tree, source=source)
+            self.modules[mod.modname] = mod
+        for mod in self.modules.values():
+            self._collect_imports(mod)
+            self._collect_defs(mod)
+        for mod in self.modules.values():
+            self._collect_module_bindings(mod)
+        for _ in range(3):                      # factory/env fixpoint
+            changed = self._build_envs()
+            if not changed:
+                break
+        for mod in self.modules.values():
+            self._collect_self_attrs(mod)
+        self._collect_edges()
+        self._compute_closures()
+        self._compute_device_returning()
+
+    # -- parsing passes --------------------------------------------------------
+
+    def _collect_imports(self, mod: ModuleInfo):
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    mod.aliases[a.asname or a.name.split(".")[0]] = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    mod.from_imports[a.asname or a.name] = (node.module,
+                                                            a.name)
+
+    def _collect_defs(self, mod: ModuleInfo):
+        def visit(node, class_name, parent, def_lines):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    if class_name:
+                        local = f"{class_name}.{child.name}"
+                    elif parent:
+                        local = f"{parent.split('::')[1]}.<locals>." \
+                                f"{child.name}"
+                    else:
+                        local = child.name
+                    qual = f"{mod.modname}::{local}"
+                    fi = FuncInfo(qualname=qual, name=child.name, module=mod,
+                                  node=child, class_name=class_name,
+                                  parent=parent,
+                                  def_lines=def_lines + (child.lineno,))
+                    mod.functions[qual] = fi
+                    self.funcs[qual] = fi
+                    if not class_name and not parent:
+                        mod.symbols.setdefault(
+                            child.name, Value("func", {qual}))
+                    visit(child, None, qual, fi.def_lines)
+                elif isinstance(child, ast.ClassDef):
+                    visit(child, child.name, None, def_lines)
+                elif not isinstance(child, (ast.Lambda,)):
+                    visit(child, class_name, parent, def_lines)
+        visit(mod.tree, None, None, ())
+
+    # -- name resolution -------------------------------------------------------
+
+    def canonical(self, mod: ModuleInfo, chain: Chain) -> Optional[str]:
+        """Canonical dotted name for an extern chain, e.g. ('np',
+        'asarray') -> 'numpy.asarray'."""
+        head = chain[0]
+        if head in mod.aliases:
+            return ".".join((mod.aliases[head],) + chain[1:])
+        if head in mod.from_imports:
+            src, orig = mod.from_imports[head]
+            return ".".join((src, orig) + chain[1:])
+        if head in ("int", "float", "bool", "len") and len(chain) == 1:
+            return f"builtins.{head}"
+        return None
+
+    def is_pallas_call(self, mod: ModuleInfo, chain: Chain) -> bool:
+        canon = self.canonical(mod, chain)
+        return bool(canon) and (canon.endswith("pallas.pallas_call")
+                                or canon.endswith("pl.pallas_call"))
+
+    def _module_for(self, canon_prefix: str) -> Optional[ModuleInfo]:
+        return self.modules.get(canon_prefix)
+
+    def resolve_value(self, mod: ModuleInfo, chain: Chain,
+                      func: Optional[FuncInfo] = None) -> Optional[Value]:
+        head = chain[0]
+        if func is not None:
+            f: Optional[FuncInfo] = func
+            while f is not None:
+                if len(chain) == 1 and head in f.env:
+                    return f.env[head]
+                f = self.funcs.get(f.parent) if f.parent else None
+            if head == "self" and func.class_name and len(chain) == 2:
+                attrs = mod.self_attrs.get(func.class_name, {})
+                if chain[1] in attrs:
+                    return attrs[chain[1]]
+                meth = f"{mod.modname}::{func.class_name}.{chain[1]}"
+                if meth in self.funcs:
+                    return Value("func", {meth})
+                return None
+        if len(chain) == 1:
+            if head in mod.symbols:
+                return mod.symbols[head]
+            if head in mod.from_imports:
+                src, orig = mod.from_imports[head]
+                other = self._module_for(src)
+                if other and orig in other.symbols:
+                    return other.symbols[orig]
+                nested = self._module_for(f"{src}.{orig}")
+                if nested:
+                    return None          # module object, not a callable
+            return None
+        # dotted: resolve the root to a scanned module, then its symbol
+        root_mod: Optional[ModuleInfo] = None
+        rest = chain[1:]
+        if head in mod.aliases:
+            root_mod = self._module_for(mod.aliases[head])
+        elif head in mod.from_imports:
+            src, orig = mod.from_imports[head]
+            root_mod = self._module_for(f"{src}.{orig}")
+        if root_mod and len(rest) == 1 and rest[0] in root_mod.symbols:
+            return root_mod.symbols[rest[0]]
+        return None
+
+    # -- jit construction parsing ---------------------------------------------
+
+    def _resolve_int_set_arg(self, mod: ModuleInfo, node: ast.AST,
+                             ) -> Set[int]:
+        s = const_int_set(node)
+        if s is not None:
+            return s
+        # helper call like donate_argnums=_donate_argnums(): union of the
+        # helper's literal returns
+        if isinstance(node, ast.Call):
+            chain = call_name(node)
+            if chain and len(chain) == 1:
+                val = mod.symbols.get(chain[0])
+                if val and val.kind == "func":
+                    out: Set[int] = set()
+                    for q in val.targets:
+                        fn = self.funcs[q]
+                        for sub in ast.walk(fn.node):
+                            if isinstance(sub, ast.Return) and sub.value:
+                                rs = const_int_set(sub.value)
+                                if rs:
+                                    out |= rs
+                    return out
+        if isinstance(node, ast.Name):
+            # local NAME = <literal or IfExp> assigned earlier in the
+            # same function — scan the enclosing module lazily
+            return set()
+        return set()
+
+    def parse_jit_call(self, mod: ModuleInfo, call: ast.Call,
+                       func: Optional[FuncInfo] = None) -> Optional[JitInfo]:
+        """If ``call`` constructs a jit value (``jax.jit(...)`` or
+        ``functools.partial(jax.jit, ...)``), return its JitInfo."""
+        chain = call_name(call)
+        if chain is None:
+            return None
+        canon = self.canonical(mod, chain) or ".".join(chain)
+        kw_start = 0
+        if canon in PARTIAL_EXTERNS or canon.endswith("functools.partial"):
+            if not call.args:
+                return None
+            inner = dotted(call.args[0])
+            if inner is None:
+                return None
+            icanon = self.canonical(mod, inner) or ".".join(inner)
+            if icanon not in JIT_EXTERNS and not icanon.endswith("jax.jit"):
+                return None
+            kw_start = 1
+        elif canon not in JIT_EXTERNS and not canon.endswith("jax.jit"):
+            return None
+        info = JitInfo()
+        args = call.args[kw_start:]
+        if kw_start == 0 and args:
+            t = dotted(args[0])
+            if t:
+                val = self.resolve_value(mod, t, func)
+                if val and val.kind in ("func", "jit"):
+                    info.targets |= val.targets
+        for kw in call.keywords:
+            if kw.arg == "donate_argnums":
+                info.donate |= self._resolve_int_set_arg(mod, kw.value)
+                if isinstance(kw.value, ast.Name):
+                    info.donate |= self._local_int_binding(mod, func, call,
+                                                          kw.value.id)
+            elif kw.arg == "static_argnums":
+                info.static_nums |= self._resolve_int_set_arg(mod, kw.value)
+            elif kw.arg == "static_argnames":
+                names = const_str_tuple(kw.value)
+                if names:
+                    info.static_names |= set(names)
+        return info
+
+    def _local_int_binding(self, mod: ModuleInfo, func: Optional[FuncInfo],
+                           call: ast.Call, name: str) -> Set[int]:
+        """Resolve ``donate_argnums=NAME`` where NAME was bound to a
+        literal (or conditional of literals) earlier in the enclosing
+        function — e.g. ``donate_args = (0, 1, 2) if donate else ()``."""
+        if func is None:
+            return set()
+        out: Set[int] = set()
+        for sub in ast.walk(func.node):
+            if isinstance(sub, ast.Assign) and sub.lineno < call.lineno:
+                for t in sub.targets:
+                    if isinstance(t, ast.Name) and t.id == name:
+                        s = const_int_set(sub.value)
+                        if s:
+                            out |= s
+        return out
+
+    # -- module-level bindings -------------------------------------------------
+
+    def _jit_from_decorators(self, mod: ModuleInfo,
+                             node: ast.AST) -> Optional[JitInfo]:
+        for dec in getattr(node, "decorator_list", []):
+            if isinstance(dec, ast.Call):
+                info = self.parse_jit_call(mod, dec)
+                if info is not None:
+                    return info
+            else:
+                chain = dotted(dec)
+                if chain:
+                    canon = self.canonical(mod, chain) or ".".join(chain)
+                    if canon in JIT_EXTERNS or canon.endswith("jax.jit"):
+                        return JitInfo()
+        return None
+
+    def _collect_module_bindings(self, mod: ModuleInfo):
+        # decorated defs anywhere become jit roots
+        for fi in mod.functions.values():
+            info = self._jit_from_decorators(mod, fi.node)
+            if info is not None:
+                info.targets.add(fi.qualname)
+                val = Value("jit", {fi.qualname}, info)
+                if fi.class_name is None and fi.parent is None:
+                    mod.symbols[fi.name] = val
+                elif fi.parent:
+                    parent = self.funcs.get(fi.parent)
+                    if parent is not None:
+                        parent.env[fi.name] = val
+        for stmt in mod.tree.body:
+            if not isinstance(stmt, ast.Assign):
+                continue
+            names = [t.id for t in stmt.targets if isinstance(t, ast.Name)]
+            if not names:
+                continue
+            if isinstance(stmt.value, ast.Call):
+                info = self.parse_jit_call(mod, stmt.value)
+                if info is not None:
+                    for n in names:
+                        mod.symbols[n] = Value("jit", set(info.targets), info)
+                    continue
+            if isinstance(stmt.value, ast.Dict):
+                targets: Set[str] = set()
+                ok = True
+                for v in stmt.value.values:
+                    c = dotted(v)
+                    val = self.resolve_value(mod, c) if c else None
+                    if val and val.kind in ("func", "jit"):
+                        targets |= val.targets
+                    else:
+                        ok = False
+                if ok and targets:
+                    for n in names:
+                        mod.symbols[n] = Value("set", targets)
+        # Pallas kernel roots: first argument of every pallas_call
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                chain = call_name(node)
+                if chain and self.is_pallas_call(mod, chain):
+                    self._mark_kernel_root(mod, node)
+
+    def _mark_kernel_root(self, mod: ModuleInfo, call: ast.Call):
+        if not call.args:
+            return
+        kern = call.args[0]
+        if isinstance(kern, ast.Call):        # functools.partial(kernel, ..)
+            if kern.args:
+                kern = kern.args[0]
+        chain = dotted(kern)
+        if not chain:
+            return
+        val = self.resolve_value(mod, chain)
+        if val is None and len(chain) == 1:
+            # kernel bodies are usually module-private defs
+            q = f"{mod.modname}::{chain[0]}"
+            if q in self.funcs:
+                val = Value("func", {q})
+        if val:
+            mod.kernel_roots |= val.targets
+
+    # -- local envs / factories ------------------------------------------------
+
+    def _build_envs(self) -> bool:
+        changed = False
+        for fi in self.funcs.values():
+            mod = fi.module
+            for stmt in ast.walk(fi.node):
+                if not isinstance(stmt, ast.Assign):
+                    continue
+                names = [t.id for t in stmt.targets
+                         if isinstance(t, ast.Name)]
+                if not names:
+                    continue
+                val = self._value_of_expr(mod, fi, stmt.value)
+                if val is None:
+                    continue
+                for n in names:
+                    old = fi.env.get(n)
+                    if old is None or old.kind != val.kind or \
+                            old.targets != val.targets:
+                        fi.env[n] = val
+                        changed = True
+        # recompute factory set
+        for fi in self.funcs.values():
+            if fi.qualname in self._factories:
+                continue
+            for sub in ast.walk(fi.node):
+                if isinstance(sub, ast.Return) and sub.value is not None:
+                    val = self._value_of_expr(fi.module, fi, sub.value)
+                    if val is not None and val.kind == "jit":
+                        self._factories[fi.qualname] = val.jit or JitInfo()
+                        changed = True
+                        break
+        return changed
+
+    def _value_of_expr(self, mod: ModuleInfo, fi: Optional[FuncInfo],
+                       expr: ast.AST) -> Optional[Value]:
+        if isinstance(expr, ast.Call):
+            info = self.parse_jit_call(mod, expr, fi)
+            if info is not None:
+                return Value("jit", set(info.targets), info)
+            chain = call_name(expr)
+            if chain:
+                val = self.resolve_value(mod, chain, fi)
+                if val and val.kind == "func":
+                    merged: Optional[JitInfo] = None
+                    for q in val.targets:
+                        if q in self._factories:
+                            merged = (self._factories[q] if merged is None
+                                      else merged.merge(self._factories[q]))
+                    if merged is not None:
+                        return Value("jit", set(merged.targets), merged)
+            return None
+        if isinstance(expr, ast.Subscript):
+            chain = dotted(expr.value)
+            if chain:
+                val = self.resolve_value(mod, chain, fi)
+                if val and val.kind == "set":
+                    return val
+            return None
+        chain = dotted(expr)
+        if chain:
+            val = self.resolve_value(mod, chain, fi)
+            if val and val.kind in ("func", "jit", "set"):
+                return val
+        return None
+
+    def _collect_self_attrs(self, mod: ModuleInfo):
+        by_class: Dict[str, Dict[str, Value]] = {}
+        for fi in mod.functions.values():
+            if not fi.class_name:
+                continue
+            attrs = by_class.setdefault(fi.class_name, {})
+            for stmt in ast.walk(fi.node):
+                if not isinstance(stmt, ast.Assign):
+                    continue
+                for t in stmt.targets:
+                    c = dotted(t)
+                    if not c or len(c) != 2 or c[0] != "self":
+                        continue
+                    val = self._value_of_expr(mod, fi, stmt.value)
+                    if val is not None:
+                        old = attrs.get(c[1])
+                        if old is not None:
+                            val = Value(old.kind if old.kind == val.kind
+                                        else "set",
+                                        old.targets | val.targets,
+                                        old.jit or val.jit)
+                        attrs[c[1]] = val
+        mod.self_attrs = by_class
+
+    # -- call classification ---------------------------------------------------
+
+    def classify_call(self, fi: FuncInfo, call: ast.Call) -> CallClass:
+        mod = fi.module
+        if isinstance(call.func, ast.Call):
+            inner = self._value_of_expr(mod, fi, call.func)
+            if inner is not None and inner.kind == "jit":
+                return CallClass("jit", inner.jit or JitInfo(),
+                                 set(inner.targets))
+            return CallClass("unknown")
+        chain = call_name(call)
+        if chain is None:
+            return CallClass("unknown")
+        if self.is_pallas_call(mod, chain):
+            return CallClass("pallas")
+        val = self.resolve_value(mod, chain, fi)
+        if val is not None:
+            if val.kind == "jit":
+                return CallClass("jit", val.jit or JitInfo(),
+                                 set(val.targets))
+            return CallClass("func", None, set(val.targets))
+        canon = self.canonical(mod, chain)
+        if canon:
+            return CallClass("extern", extern=canon)
+        return CallClass("unknown")
+
+    def _collect_edges(self):
+        for fi in self.funcs.values():
+            for node in ast.walk(fi.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                cc = self.classify_call(fi, node)
+                if cc.kind == "jit":
+                    fi.jit_sites.append((node, cc.jit or JitInfo()))
+                    fi.callees |= cc.targets
+                elif cc.kind == "pallas":
+                    fi.has_pallas = True
+                elif cc.kind == "func":
+                    fi.callees |= cc.targets
+            # nested defs call-contain their parents' reachability
+            if fi.parent:
+                parent = self.funcs.get(fi.parent)
+                if parent is not None:
+                    parent.callees.add(fi.qualname)
+
+    def _compute_closures(self):
+        # DEVICE: downward closure from jit inner targets + kernel roots
+        seeds: Set[str] = set()
+        for mod in self.modules.values():
+            seeds |= mod.kernel_roots
+            for val in mod.symbols.values():
+                if val.kind == "jit":
+                    seeds |= val.targets
+        for fi in self.funcs.values():
+            for _, info in fi.jit_sites:
+                seeds |= info.targets
+            for val in fi.env.values():
+                if val.kind == "jit":
+                    seeds |= val.targets
+        frontier = set(seeds)
+        device = set(seeds)
+        while frontier:
+            nxt: Set[str] = set()
+            for q in frontier:
+                fn = self.funcs.get(q)
+                if fn is None:
+                    continue
+                for c in fn.callees:
+                    if c not in device:
+                        device.add(c)
+                        nxt.add(c)
+            frontier = nxt
+        self.device_funcs = device
+        # DISPATCHERS: upward closure from direct jit/pallas call sites
+        rev: Dict[str, Set[str]] = {}
+        for fi in self.funcs.values():
+            for c in fi.callees:
+                rev.setdefault(c, set()).add(fi.qualname)
+        base = {fi.qualname for fi in self.funcs.values()
+                if (fi.jit_sites or fi.has_pallas)
+                and fi.qualname not in device}
+        disp = set(base)
+        frontier = set(base)
+        while frontier:
+            nxt = set()
+            for q in frontier:
+                for caller in rev.get(q, ()):
+                    if caller not in disp and caller not in device:
+                        disp.add(caller)
+                        nxt.add(caller)
+            frontier = nxt
+        self.dispatchers = disp
+
+    # -- device-returning fixpoint ---------------------------------------------
+
+    def call_returns_device(self, fi: FuncInfo, call: ast.Call) -> bool:
+        cc = self.classify_call(fi, call)
+        if cc.kind in ("jit", "pallas"):
+            return True
+        if cc.kind == "func":
+            return bool(cc.targets & self.device_returning)
+        if cc.kind == "extern" and cc.extern:
+            if cc.extern in _JAX_HOST_EXTERNS:
+                return False
+            return cc.extern.startswith("jax.")
+        return False
+
+    def expr_is_coercion(self, fi: FuncInfo, expr: ast.AST) -> bool:
+        """True for calls whose result is host data even if the inputs
+        are device buffers: explicit coercions/fetches plus the AOT
+        introspection methods (taint stops there)."""
+        if not isinstance(expr, ast.Call):
+            return False
+        if isinstance(expr.func, ast.Attribute) and \
+                expr.func.attr in HOST_RESULT_ATTRS:
+            return True
+        chain = call_name(expr)
+        if chain is None:
+            return False
+        canon = self.canonical(fi.module, chain)
+        return canon in HOST_COERCIONS
+
+    def taint_stops(self, fi: FuncInfo, expr: ast.AST) -> Set[int]:
+        """Node ids of subtrees under taint-stopping calls inside
+        ``expr`` — loads and device-calls there don't taint the result."""
+        skip: Set[int] = set()
+        for sub in ast.walk(expr):
+            if id(sub) in skip:
+                continue
+            if isinstance(sub, ast.Call) and self.expr_is_coercion(fi, sub):
+                for inner in ast.walk(sub):
+                    skip.add(id(inner))
+        return skip
+
+    def _returns_device(self, fi: FuncInfo) -> bool:
+        tainted: Set[Chain] = set()
+
+        def expr_tainted(expr: ast.AST) -> bool:
+            if self.expr_is_coercion(fi, expr):
+                return False
+            skip = self.taint_stops(fi, expr)
+            for sub in ast.walk(expr):
+                if id(sub) in skip:
+                    continue
+                if isinstance(sub, ast.Call) and \
+                        self.call_returns_device(fi, sub):
+                    return True
+            for chain, node in loads_in(expr):
+                if id(node) in skip:
+                    continue
+                for t in tainted:
+                    if chain[:len(t)] == t:
+                        return True
+            return False
+
+        hit = False
+        for stmt in ast.walk(fi.node):
+            if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                value = stmt.value
+                if value is not None and expr_tainted(value):
+                    for c in assign_target_chains(stmt):
+                        tainted.add(c)
+        for stmt in ast.walk(fi.node):
+            if isinstance(stmt, ast.Return) and stmt.value is not None:
+                if expr_tainted(stmt.value):
+                    hit = True
+        return hit
+
+    def _compute_device_returning(self):
+        changed = True
+        rounds = 0
+        while changed and rounds < 6:
+            changed = False
+            rounds += 1
+            for fi in self.funcs.values():
+                if fi.qualname in self.device_returning:
+                    continue
+                # NB: membership in the DEVICE closure alone does not
+                # imply device-returning — config/shape helpers called
+                # under trace return plain Python data.  Only the
+                # structural check (returns something built from jit/
+                # pallas/jnp calls) marks a function.
+                if self._returns_device(fi):
+                    self.device_returning.add(fi.qualname)
+                    changed = True

@@ -1,0 +1,36 @@
+"""Rule registry: rule id -> one-line description (``--list-rules``)."""
+
+RULES = {
+    "host-sync": (
+        "host/device sync (.item(), int()/float()/bool(), np.asarray, "
+        "jax.device_get) on a traced or un-synced device value in a "
+        "function reachable from jax.jit / pl.pallas_call"),
+    "retrace-hazard": (
+        "data-dependent Python scalar in a jitted signature (static arg "
+        "or int()/float()/len() argument) — forces a retrace or weak-"
+        "dtype recompile per distinct value"),
+    "donated-read": (
+        "read of a buffer after it was donated to a jax.jit(..., "
+        "donate_argnums=...) call in the same scope"),
+    "kernel-oracle": (
+        "pallas_call kernel without a matching *_ref oracle in "
+        "kernels/ref.py"),
+    "kernel-wrapper": (
+        "pallas_call kernel without a pad/trim wrapper in "
+        "kernels/ops.py"),
+    "kernel-test": (
+        "pallas_call kernel whose ops wrapper + ref oracle are never "
+        "exercised together in tests/test_kernels.py"),
+    "kernel-exact": (
+        "pallas_call kernel without an exact-equality "
+        "(assert_array_equal) test against its oracle"),
+    "pallas-outside-kernels": (
+        "raw pl.pallas_call outside src/repro/kernels/"),
+    "cache-version": (
+        "ClusterStore-style method mutates a centroid/prob/count column "
+        "without bumping .versions — rots the (cid, version) GT-label "
+        "cache key"),
+    "bare-suppression": (
+        "focuslint suppression without a '-- justification'"),
+    "parse-error": "file failed to parse",
+}

@@ -1,0 +1,257 @@
+"""Rules ``host-sync`` and ``retrace-hazard``.
+
+Two function populations, computed by the call-graph walk:
+
+* DEVICE functions (traced: reachable from a jit root or a Pallas kernel
+  body) — any ``.item()`` / ``jax.device_get`` / ``np.asarray`` /
+  ``np.array`` is an error, and ``int()/float()/bool()`` of a traced
+  value is an error (it forces a concretization mid-trace);
+* DISPATCHERS (host hot path: transitively call a jitted callable) —
+  ``.item()`` and ``jax.device_get`` are flagged unconditionally (each
+  one stalls async dispatch); ``int()/float()/bool()/np.asarray`` only
+  when applied to a value tracked as un-synced device data (result of a
+  jit call or of a device-returning function, propagated through local
+  assignments).
+
+Test files are skipped: tests sync on purpose to assert values.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set, Tuple
+
+from repro.analysis.astutil import (Chain, assign_target_chains, call_name,
+                                    dotted, loads_in)
+from repro.analysis.callgraph import (FuncInfo, JitInfo, ModuleInfo,
+                                      ProjectIndex)
+from repro.analysis.report import Finding
+
+_SCALARS = {"builtins.int", "builtins.float", "builtins.bool"}
+_NP_CASTS = {"numpy.asarray", "numpy.array"}
+
+
+def _mk(fi: FuncInfo, node: ast.AST, rule: str, msg: str) -> Finding:
+    f = Finding(rule=rule, path=fi.module.path, line=node.lineno,
+                col=getattr(node, "col_offset", 0), message=msg)
+    f._def_lines = fi.def_lines
+    return f
+
+
+def check_module(project: ProjectIndex, mod: ModuleInfo) -> List[Finding]:
+    if mod.in_tests:
+        return []
+    out: List[Finding] = []
+    seen: Set[Tuple[int, int, str]] = set()
+
+    def emit(fi, node, rule, msg):
+        key = (node.lineno, getattr(node, "col_offset", 0), rule)
+        if key not in seen:
+            seen.add(key)
+            out.append(_mk(fi, node, rule, msg))
+
+    for fi in mod.functions.values():
+        if fi.qualname in project.device_funcs:
+            _check_device(project, fi, emit)
+        elif fi.qualname in project.dispatchers:
+            _check_dispatcher(project, fi, emit)
+    return out
+
+
+# -- DEVICE (traced) functions -------------------------------------------------
+
+def _check_device(project: ProjectIndex, fi: FuncInfo, emit):
+    name = fi.name
+    for node in ast.walk(fi.node):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = call_name(node)
+        if chain is None:
+            continue
+        if len(chain) >= 2 and chain[-1] == "item":
+            emit(fi, node, "host-sync",
+                 f".item() inside traced function '{name}' — concretizes "
+                 f"a tracer and blocks compilation")
+            continue
+        canon = project.canonical(fi.module, chain)
+        if canon == "jax.device_get":
+            emit(fi, node, "host-sync",
+                 f"jax.device_get inside traced function '{name}'")
+        elif canon in _NP_CASTS:
+            emit(fi, node, "host-sync",
+                 f"{'.'.join(chain)} inside traced function '{name}' — "
+                 f"materializes a tracer on host; use jnp instead")
+        elif canon in _SCALARS and node.args:
+            if _mentions_dynamic(node.args[0]):
+                emit(fi, node, "host-sync",
+                     f"{chain[0]}() of a traced value inside '{name}' — "
+                     f"concretization error or silent constant-folding")
+
+
+def _mentions_dynamic(expr: ast.AST) -> bool:
+    """True when the expression references non-static data.  ``loads_in``
+    already drops pure ``.shape``/``.ndim``/``.dtype`` chains; loads that
+    appear only as ``len()`` arguments are shape-static under trace and
+    are dropped here."""
+    in_len = set()
+    for sub in ast.walk(expr):
+        if isinstance(sub, ast.Call) and call_name(sub) == ("len",):
+            for inner in ast.walk(sub):
+                in_len.add(id(inner))
+    return any(id(node) not in in_len for _, node in loads_in(expr))
+
+
+# -- DISPATCHER (host hot path) functions --------------------------------------
+
+def _check_dispatcher(project: ProjectIndex, fi: FuncInfo, emit):
+    tainted: Set[Chain] = set()
+    name = fi.name
+
+    def expr_tainted(expr: ast.AST) -> bool:
+        if project.expr_is_coercion(fi, expr):
+            return False
+        skip = project.taint_stops(fi, expr)
+        for sub in ast.walk(expr):
+            if id(sub) in skip:
+                continue
+            if isinstance(sub, ast.Call) and \
+                    project.call_returns_device(fi, sub):
+                return True
+        for chain, node in loads_in(expr):
+            if id(node) in skip:
+                continue
+            for t in tainted:
+                if chain[:len(t)] == t:
+                    return True
+        return False
+
+    def visit_expr(expr: Optional[ast.AST]):
+        if expr is None:
+            return
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = call_name(node)
+            if chain is None:
+                continue
+            if len(chain) >= 2 and chain[-1] == "item":
+                emit(fi, node, "host-sync",
+                     f".item() in hot-path function '{name}' — blocks "
+                     f"until the device result lands")
+                continue
+            canon = project.canonical(fi.module, chain)
+            if canon == "jax.device_get":
+                emit(fi, node, "host-sync",
+                     f"jax.device_get in hot-path function '{name}' — "
+                     f"synchronous device fetch stalls async dispatch")
+            elif canon in _NP_CASTS and node.args and \
+                    expr_tainted(node.args[0]):
+                emit(fi, node, "host-sync",
+                     f"{'.'.join(chain)} of an un-synced device value in "
+                     f"hot-path function '{name}' — implicit blocking "
+                     f"transfer")
+            elif canon in _SCALARS and node.args and \
+                    expr_tainted(node.args[0]):
+                emit(fi, node, "host-sync",
+                     f"{chain[0]}() of an un-synced device value in "
+                     f"hot-path function '{name}' — implicit blocking "
+                     f"transfer")
+            cc = project.classify_call(fi, node)
+            if cc.kind == "jit":
+                _check_retrace(project, fi, node, cc.jit or JitInfo(), emit)
+
+    def visit_block(stmts):
+        for stmt in stmts:
+            visit_stmt(stmt)
+
+    def visit_stmt(stmt: ast.AST):
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return                      # nested defs are their own FuncInfo
+        if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            if stmt.value is not None:
+                visit_expr(stmt.value)
+                vt = expr_tainted(stmt.value)
+                for c in assign_target_chains(stmt):
+                    if vt:
+                        tainted.add(c)
+                    else:
+                        for t in list(tainted):
+                            if t[:len(c)] == c:
+                                tainted.discard(t)
+            return
+        if isinstance(stmt, ast.For):
+            visit_expr(stmt.iter)
+            if expr_tainted(stmt.iter):
+                for c in assign_target_chains(stmt):
+                    tainted.add(c)
+            visit_block(stmt.body)
+            visit_block(stmt.orelse)
+            return
+        if isinstance(stmt, (ast.If, ast.While)):
+            visit_expr(stmt.test)
+            visit_block(stmt.body)
+            visit_block(stmt.orelse)
+            return
+        if isinstance(stmt, ast.With):
+            for item in stmt.items:
+                visit_expr(item.context_expr)
+            visit_block(stmt.body)
+            return
+        if isinstance(stmt, ast.Try):
+            visit_block(stmt.body)
+            for h in stmt.handlers:
+                visit_block(h.body)
+            visit_block(stmt.orelse)
+            visit_block(stmt.finalbody)
+            return
+        # Expr / Return / Assert / Raise / Delete / ...
+        for sub in ast.iter_child_nodes(stmt):
+            if isinstance(sub, ast.expr):
+                visit_expr(sub)
+
+    visit_block(fi.node.body)
+
+
+# -- retrace hazards at jit call sites -----------------------------------------
+
+def _data_dependent(expr: ast.AST) -> bool:
+    for sub in ast.walk(expr):
+        if isinstance(sub, ast.Call):
+            chain = call_name(sub)
+            if chain is None:
+                continue
+            if chain in (("int",), ("float",), ("len",)) or \
+                    (len(chain) >= 2 and chain[-1] == "item"):
+                return True
+    return False
+
+
+def _check_retrace(project: ProjectIndex, fi: FuncInfo, call: ast.Call,
+                   info: JitInfo, emit):
+    static_pos = set(info.static_nums)
+    for q in info.targets:
+        fn = project.funcs.get(q)
+        if fn is None:
+            continue
+        params = fn.params
+        for nm in info.static_names:
+            if nm in params:
+                static_pos.add(params.index(nm))
+    for i, arg in enumerate(call.args):
+        if i in static_pos and _data_dependent(arg):
+            emit(fi, arg, "retrace-hazard",
+                 f"data-dependent value in static argument {i} of a "
+                 f"jitted call — retraces per distinct value")
+        elif i not in static_pos and isinstance(arg, ast.Call):
+            chain = call_name(arg)
+            if chain in (("int",), ("float",)):
+                emit(fi, arg, "retrace-hazard",
+                     f"Python scalar from {chain[0]}() passed to a jitted "
+                     f"call — weak-typed host scalar; pass a jnp/np "
+                     f"array to keep the trace signature stable")
+    for kw in call.keywords:
+        if kw.arg in info.static_names and _data_dependent(kw.value):
+            emit(fi, kw.value, "retrace-hazard",
+                 f"data-dependent value in static argument "
+                 f"'{kw.arg}' of a jitted call — retraces per distinct "
+                 f"value")

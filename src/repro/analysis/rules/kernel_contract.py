@@ -1,0 +1,154 @@
+"""Rules ``kernel-oracle`` / ``kernel-wrapper`` / ``kernel-test`` /
+``kernel-exact`` / ``pallas-outside-kernels``.
+
+The repo's kernel contract (DESIGN.md §11.3): every public entry point
+in a ``kernels/`` module that reaches a ``pl.pallas_call`` must have
+
+* a pure-jnp oracle ``<entry>_ref`` in ``kernels/ref.py``,
+* a pad/trim wrapper ``<entry>`` in ``kernels/ops.py``,
+* a test in ``tests/test_kernels.py`` that calls both the wrapper and
+  the oracle, with at least one exact-equality (``assert_array_equal``)
+  comparison,
+
+and raw ``pallas_call`` anywhere outside ``kernels/`` is an error —
+kernels bypass the wrapper's shape-padding discipline otherwise.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.astutil import call_name, dotted
+from repro.analysis.callgraph import (FuncInfo, ModuleInfo, ProjectIndex)
+from repro.analysis.report import Finding
+
+_EXEMPT = {"ops.py", "ref.py", "__init__.py"}
+
+
+def _mk(path: str, line: int, rule: str, msg: str,
+        def_lines=()) -> Finding:
+    f = Finding(rule=rule, path=path, line=line, message=msg)
+    f._def_lines = tuple(def_lines)
+    return f
+
+
+def _kernel_modules(project: ProjectIndex):
+    kmods, ops_mod, ref_mod = [], None, None
+    for mod in project.modules.values():
+        if not mod.in_kernels:
+            continue
+        base = os.path.basename(mod.path)
+        if base == "ops.py":
+            ops_mod = mod
+        elif base == "ref.py":
+            ref_mod = mod
+        elif base not in _EXEMPT:
+            kmods.append(mod)
+    return kmods, ops_mod, ref_mod
+
+
+def _entries(project: ProjectIndex, mod: ModuleInfo) -> List[FuncInfo]:
+    """Public top-level functions that reach a pallas_call (directly or
+    through a module-local helper)."""
+    local_pallas = {fi.qualname for fi in mod.functions.values()
+                    if fi.has_pallas}
+    out = []
+    for fi in mod.functions.values():
+        if fi.class_name or fi.parent or fi.name.startswith("_"):
+            continue
+        if fi.has_pallas or (fi.callees & local_pallas):
+            out.append(fi)
+    return out
+
+
+def check_project(project: ProjectIndex) -> List[Finding]:
+    out: List[Finding] = []
+    kmods, ops_mod, ref_mod = _kernel_modules(project)
+    test_mod = None
+    for mod in project.modules.values():
+        if mod.in_tests and os.path.basename(mod.path) == "test_kernels.py":
+            test_mod = mod
+
+    # pallas_call outside kernels/
+    for mod in project.modules.values():
+        if mod.in_kernels:
+            continue
+        for fi in mod.functions.values():
+            if not fi.has_pallas:
+                continue
+            for node in ast.walk(fi.node):
+                if isinstance(node, ast.Call):
+                    chain = call_name(node)
+                    if chain and project.is_pallas_call(mod, chain):
+                        out.append(_mk(
+                            mod.path, node.lineno, "pallas-outside-kernels",
+                            f"raw pallas_call in '{fi.name}' outside "
+                            f"kernels/ — route through a kernels/ops.py "
+                            f"wrapper", fi.def_lines))
+
+    if not kmods:
+        return out
+    ops_calls, ref_calls, exact_ops = _scan_tests(project, test_mod,
+                                                  ops_mod, ref_mod)
+    for mod in kmods:
+        for entry in _entries(project, mod):
+            w = entry.name
+            line, dl = entry.node.lineno, entry.def_lines
+            if ref_mod is None or f"{w}_ref" not in ref_mod.symbols:
+                out.append(_mk(mod.path, line, "kernel-oracle",
+                               f"kernel '{w}' has no oracle "
+                               f"'{w}_ref' in kernels/ref.py", dl))
+            if ops_mod is None or w not in ops_mod.symbols:
+                out.append(_mk(mod.path, line, "kernel-wrapper",
+                               f"kernel '{w}' has no pad/trim wrapper "
+                               f"'{w}' in kernels/ops.py", dl))
+            if w not in ops_calls or f"{w}_ref" not in ref_calls:
+                out.append(_mk(mod.path, line, "kernel-test",
+                               f"tests/test_kernels.py never exercises "
+                               f"ops.{w} together with ref.{w}_ref", dl))
+            elif w not in exact_ops:
+                out.append(_mk(mod.path, line, "kernel-exact",
+                               f"no exact-equality (assert_array_equal) "
+                               f"test pins ops.{w} to its oracle", dl))
+    return out
+
+
+def _scan_tests(project: ProjectIndex, test_mod: Optional[ModuleInfo],
+                ops_mod: Optional[ModuleInfo],
+                ref_mod: Optional[ModuleInfo]):
+    """Which ops wrappers / ref oracles does test_kernels.py call, and
+    which wrappers appear in a test function that also does an
+    assert_array_equal?"""
+    ops_calls: Set[str] = set()
+    ref_calls: Set[str] = set()
+    exact_ops: Set[str] = set()
+    if test_mod is None:
+        return ops_calls, ref_calls, exact_ops
+    ops_q = {f"{ops_mod.modname}::{n}": n
+             for n in (ops_mod.symbols if ops_mod else ())}
+    ref_q = {f"{ref_mod.modname}::{n}": n
+             for n in (ref_mod.symbols if ref_mod else ())}
+    for fi in test_mod.functions.values():
+        local_ops: Set[str] = set()
+        has_exact = False
+        for node in ast.walk(fi.node):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = call_name(node)
+            if chain and chain[-1] == "assert_array_equal":
+                has_exact = True
+            if chain is None:
+                continue
+            val = project.resolve_value(test_mod, chain, fi)
+            if val is None:
+                continue
+            for q in val.targets:
+                if q in ops_q:
+                    local_ops.add(ops_q[q])
+                if q in ref_q:
+                    ref_calls.add(ref_q[q])
+        ops_calls |= local_ops
+        if has_exact:
+            exact_ops |= local_ops
+    return ops_calls, ref_calls, exact_ops

@@ -315,6 +315,9 @@ class ClusterStore:
             return
         rows = self.rows_of(cids)
         uniq, cnt = np.unique(rows, return_counts=True)
+        # focuslint: disable=cache-version -- intentional exemption:
+        # attach only bumps counts; GT labels key on (cid, version) over
+        # centroids/mean_probs, which attach leaves untouched
         self.counts[uniq] += cnt
         self._append_attach_log(rows, np.asarray(obj_ids, np.int64),
                                 np.asarray(frame_ids, np.int64))

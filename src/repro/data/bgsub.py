@@ -59,6 +59,8 @@ def match_flat(a: np.ndarray, b: np.ndarray, threshold: float,
     if _resolve_backend(backend) == "kernel":
         from repro.kernels import ops
         m, _ = ops.pixel_match(a, b, threshold)
+        # focuslint: disable=host-sync -- gate decision is consumed by
+        # host control flow; match_flat returns numpy by contract
         return np.asarray(m).astype(np.int64)
     a = np.ascontiguousarray(a, np.float32)
     b = np.ascontiguousarray(b, np.float32)
@@ -129,7 +131,11 @@ class BackgroundSubtractor:
             from repro.kernels import ops
             new_bg, _, hot = ops.motion_gate(frame, self._bg, self.alpha,
                                              self.threshold, tile=t)
+            # focuslint: disable=host-sync -- _bg stays numpy so the
+            # kernel and numpy backends share state bit-for-bit
             self._bg = np.asarray(new_bg)
+            # focuslint: disable=host-sync -- per-frame gate: hot tiles
+            # feed host connected-components
             return np.asarray(hot)
         diff = np.abs(frame - self._bg).mean(axis=-1)        # (H, W)
         self._bg = (1 - self.alpha) * self._bg + self.alpha * frame

@@ -72,6 +72,9 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 @functools.partial(jax.jit,
                    static_argnames=("causal", "bq", "bk", "interpret"))
+# focuslint: disable=kernel-exact -- no bit-exact oracle exists: the
+# online-softmax tile accumulation reorders fp32 sums vs the dense ref;
+# pinned by assert_allclose at fp32 tolerances in test_kernels instead
 def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
                     bk: int = 128, interpret: bool = True):
     """q, k, v: (BH, S, dh) -> (BH, S, dh)."""
