@@ -1,0 +1,214 @@
+"""Multi-tenant serving benchmark: ``QueryService`` continuous batching
+vs per-tenant sequential serving, plus sustained mixed query+ingest load.
+
+Two sections, one record per run appended to BENCH_serve.json:
+
+* **equivalence / GT ratio** — N tenants with overlapping dominant-class
+  workloads served through one ``QueryService`` (shared engine, merged
+  ``query_many`` per cycle) vs the same requests replayed sequentially on
+  per-tenant engines. Gates: byte-identical frames per request, and the
+  shared engine pays strictly fewer GT-CNN invocations (cross-tenant
+  candidate dedup + one shared label cache vs one cache per tenant).
+* **mixed load** — a streaming ingestor attached to the service; every
+  round offers one ingest chunk and one request per tenant, under both
+  backpressure policies. Reports sustained QPS, per-tenant p50/p99
+  latency, deadline misses, and the deferred/shed ingest counters that
+  show the policy actually arbitrating.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import append_trajectory, emit
+from repro.core.engine import QueryEngine
+from repro.core.ingest import IngestConfig, ingest
+from repro.core.streaming import StreamingIngestor
+from repro.serve import QueryService, ServiceConfig
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_serve.json")
+
+FEAT_DIM = 32
+N_CLASSES = 12
+N_OBJECTS = 4096
+N_TENANTS = 4
+REQS_PER_TENANT = 6
+N_CHUNKS = 8
+SLO_MS = 250.0
+CFG = IngestConfig(K=3, threshold=1.2, max_clusters=512, batch_size=256)
+GT_FLOPS = 1.2e11
+
+
+def _cheap(batch):
+    flat = batch.reshape(len(batch), -1)
+    feats = (flat[:, :FEAT_DIM] * 10.0).astype(np.float32)
+    probs = np.abs(flat[:, FEAT_DIM:FEAT_DIM + N_CLASSES]) + 1e-3
+    return (probs / probs.sum(1, keepdims=True)).astype(np.float32), feats
+
+
+def _gt_apply(batch):
+    return np.rint(batch[:, 0, 0, 2] * 20).astype(np.int64) % N_CLASSES
+
+
+def _stream(seed=0, n=N_OBJECTS):
+    r = np.random.default_rng(seed)
+    modes = r.random((40, 6, 6, 3)).astype(np.float32)
+    pick = r.integers(0, 40, n)
+    crops = np.clip(modes[pick] + r.normal(0, 0.05, (n, 6, 6, 3)), 0, 1
+                    ).astype(np.float32)
+    frames = np.sort(r.integers(0, n // 4, n))
+    return crops, frames
+
+
+def _tenant_workloads():
+    """Overlapping per-tenant class subsets (rotated windows over the
+    class space): the overlap is what continuous batching dedupes."""
+    span = max(N_CLASSES // 2, 1)
+    return {f"tenant{t}": [(t * 2 + i) % N_CLASSES for i in range(span)]
+            for t in range(N_TENANTS)}
+
+
+# ---------------------------------------------------------------------------
+# section 1: equivalence + batched-vs-sequential GT ratio
+# ---------------------------------------------------------------------------
+
+def run_equivalence():
+    crops, frames = _stream()
+    index, _ = ingest(crops, frames, _cheap, 1.0, CFG,
+                      n_local_classes=N_CLASSES)
+    workloads = _tenant_workloads()
+
+    engine = QueryEngine(index, gt_apply=_gt_apply,
+                         gt_flops_per_image=GT_FLOPS)
+    service = QueryService(engine)
+    t0 = time.perf_counter()
+    for _ in range(REQS_PER_TENANT):
+        for tenant, classes in workloads.items():
+            service.submit(tenant, classes)
+    responses = service.run_until_idle()
+    batched_wall = time.perf_counter() - t0
+    gt_batched = engine.stats.n_gt_invocations
+
+    # sequential baseline: each tenant serves its own requests on its own
+    # engine (its own GT-label cache) — no cross-tenant sharing
+    ref_engines = {t: QueryEngine(index, gt_apply=_gt_apply,
+                                  gt_flops_per_image=GT_FLOPS)
+                   for t in workloads}
+    t0 = time.perf_counter()
+    ref_results = []
+    for _ in range(REQS_PER_TENANT):
+        for tenant, classes in workloads.items():
+            results, _ = ref_engines[tenant].query_many(classes)
+            ref_results.append(results)
+    seq_wall = time.perf_counter() - t0
+    gt_sequential = sum(e.stats.n_gt_invocations
+                        for e in ref_engines.values())
+
+    frames_identical = len(responses) == len(ref_results) and all(
+        np.array_equal(got.frames, want.frames)
+        and got.queried_class == want.queried_class
+        for resp, wants in zip(responses, ref_results)
+        for got, want in zip(resp.results, wants))
+    return {
+        "n_tenants": N_TENANTS,
+        "n_requests": len(responses),
+        "frames_identical": bool(frames_identical),
+        "gt_batched": int(gt_batched),
+        "gt_sequential": int(gt_sequential),
+        "gt_ratio": round(gt_sequential / max(gt_batched, 1), 2),
+        "merged_calls": int(service.stats.n_merged_calls),
+        "shared_pairs": int(service.stats.n_shared_queries),
+        "batched_wall_s": round(batched_wall, 4),
+        "seq_wall_s": round(seq_wall, 4),
+    }
+
+
+# ---------------------------------------------------------------------------
+# section 2: sustained mixed query+ingest load, both policies
+# ---------------------------------------------------------------------------
+
+def run_mixed(policy: str):
+    crops, frames = _stream(seed=1)
+    bounds = np.linspace(0, len(crops), N_CHUNKS + 1).astype(int)
+    workloads = _tenant_workloads()
+
+    ing = StreamingIngestor(_cheap, 1.0, CFG, n_local_classes=N_CLASSES)
+    engine = QueryEngine(ing.index, gt_apply=_gt_apply,
+                         gt_flops_per_image=GT_FLOPS)
+    service = QueryService(
+        engine,
+        ServiceConfig(policy=policy, max_ingest_backlog=N_CHUNKS),
+        ingestor=ing)
+
+    t0 = time.perf_counter()
+    for lo, hi in zip(bounds, bounds[1:]):
+        service.offer_ingest(crops[lo:hi], frames[lo:hi])
+        for tenant, classes in workloads.items():
+            service.submit(tenant, classes, deadline_s=SLO_MS / 1e3)
+        service.step()          # query cycle (ingest-first under "ingest")
+        service.step()          # idle cycle: deferred ingest catches up
+    service.run_until_idle()
+    wall = time.perf_counter() - t0
+
+    slo = service.slo
+    n_completed = service.stats.n_completed
+    missed = sum(ts.n_deadline_missed for ts in slo)
+    return {
+        "policy": policy,
+        "n_requests": int(n_completed),
+        "qps": round(n_completed / max(wall, 1e-9), 1),
+        "p50_ms": round(slo.percentile_s(50.0) * 1e3, 3),
+        "p99_ms": round(slo.percentile_s(99.0) * 1e3, 3),
+        "deadline_missed": int(missed),
+        "ingest_chunks": int(service.stats.n_ingest_chunks),
+        "ingest_deferred": int(service.stats.n_ingest_deferred),
+        "ingest_shed_chunks": int(service.stats.n_ingest_shed_chunks),
+        "merged_calls": int(service.stats.n_merged_calls),
+        "wall_s": round(wall, 4),
+        "tenants": slo.summary(),
+    }
+
+
+def run():
+    eq = run_equivalence()
+    mixed = {p: run_mixed(p) for p in ("query", "ingest")}
+    record = {
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "n_objects": N_OBJECTS,
+        **eq,
+        "mixed": mixed,
+    }
+    append_trajectory(BENCH_PATH, record)
+    emit(f"serve.batched.{eq['n_requests']}req",
+         eq["batched_wall_s"] * 1e6,
+         f"gt_calls={eq['gt_batched']}|merged_calls={eq['merged_calls']}")
+    emit(f"serve.sequential.{eq['n_requests']}req",
+         eq["seq_wall_s"] * 1e6,
+         f"gt_calls={eq['gt_sequential']}"
+         f"|ratio={eq['gt_ratio']:.1f}x|identical={eq['frames_identical']}")
+    for p, m in mixed.items():
+        emit(f"serve.mixed.{p}", m["wall_s"] * 1e6,
+             f"qps={m['qps']}|p50={m['p50_ms']}ms|p99={m['p99_ms']}ms"
+             f"|missed={m['deadline_missed']}"
+             f"|deferred={m['ingest_deferred']}")
+
+    assert eq["frames_identical"], \
+        "batched service diverged from per-tenant sequential serving"
+    assert eq["gt_batched"] < eq["gt_sequential"], (
+        f"continuous batching must pay strictly fewer GT calls: "
+        f"{eq['gt_batched']} vs {eq['gt_sequential']}")
+    for p, m in mixed.items():
+        assert m["n_requests"] == N_TENANTS * N_CHUNKS, m
+        assert m["ingest_chunks"] == N_CHUNKS, m
+    # the policies must actually arbitrate differently: query priority
+    # defers chunks behind queries, ingest priority never does
+    assert mixed["query"]["ingest_deferred"] > 0, mixed["query"]
+    assert mixed["ingest"]["ingest_deferred"] == 0, mixed["ingest"]
+    return record
+
+
+if __name__ == "__main__":
+    run()

@@ -48,13 +48,27 @@ def grow_row_cache(vers: np.ndarray, labels: np.ndarray, n_rows: int,
     return vers, labels
 
 
+def _reject_bool_kx(x):
+    # bool is a subclass of int, so True/False would silently pass the
+    # scalar check below and query with Kx=1/0 — almost certainly a
+    # mis-passed flag; demand an explicit integer
+    if isinstance(x, (bool, np.bool_)):
+        raise TypeError(
+            f"Kx must be an int or None, got bool {x!r} (True/False would "
+            f"silently query with Kx=1/0)")
+
+
 def normalize_kx(Kx, n_queries: int) -> List[Optional[int]]:
     """One Kx per query: broadcast a scalar/None, validate a sequence."""
+    _reject_bool_kx(Kx)
     if Kx is None or isinstance(Kx, (int, np.integer)):
         return [Kx] * n_queries
     if len(Kx) != n_queries:
         raise ValueError("per-query Kx length mismatch")
-    return list(Kx)
+    out = list(Kx)
+    for k in out:
+        _reject_bool_kx(k)
+    return out
 
 
 def probe_row_cache(vers: np.ndarray, cached: np.ndarray, rows: np.ndarray,

@@ -139,17 +139,31 @@ class AdaptiveSampler:
         self.stride = cfg.min_stride
 
     def observe(self, n_ingested: int, n_skipped: int,
-                recall: Optional[float] = None) -> int:
+                recall: Optional[float] = None,
+                n_sampled_out: int = 0) -> int:
         """One control step; returns the stride for the next window.
 
         ``n_ingested`` — objects that reached the CNN this window;
-        ``n_skipped`` — objects the tracker/gate/stride filtered out;
+        ``n_skipped`` — objects the tracker/gate deduplicated *among
+        those that survived the stride filter*;
+        ``n_sampled_out`` — objects the frame stride itself dropped.
+        They are excluded from the duplicate rate: at stride S the stride
+        removes >= (S-1)/S of the window regardless of content, so
+        counting them as "skipped" is a positive feedback loop — the
+        controller's own stride manufactures the redundancy signal that
+        raises the stride, ratcheting to ``max_stride`` until the recall
+        probe collapses it and the loop starts over (oscillation instead
+        of convergence). Only gate/tracker skips measure content
+        redundancy, and they naturally fall as the stride widens past the
+        stream's temporal-correlation window — the negative feedback that
+        makes AIMD settle.
         ``recall`` — optional probe of gated recall vs. ungated ingest.
         """
         c = self.cfg
         if recall is not None and recall < c.recall_floor:
             self.stride = c.min_stride
             return self.stride
+        del n_sampled_out                  # accepted, never a control input
         total = n_ingested + n_skipped
         if total <= 0:
             return self.stride

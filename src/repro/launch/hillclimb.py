@@ -88,13 +88,21 @@ def gate_tune(n_frames: int = 240, objs_per_frame: int = 4,
                     for c in range(n_classes))
         recall = hits / denom if denom else 1.0
         ingested = ing.stats.n_cnn_invocations - before[0]
+        # content redundancy only: gate + tracker skips among the objects
+        # that survived the stride. Stride-filtered objects go in
+        # separately (n_sampled_out) — folding them into the skip count
+        # was the positive feedback loop that ratcheted the stride to
+        # max_stride on its own signal (ISSUE 8 bugfix; see
+        # AdaptiveSampler.observe).
         skipped = (ing.stats.n_pixel_dedup + ing.stats.n_gate_skipped
-                   + ing.stats.n_sampled_out
-                   - before[1] - before[2] - before[3])
-        stride = sampler.observe(ingested, skipped, recall=recall)
+                   - before[1] - before[2])
+        sampled_out = ing.stats.n_sampled_out - before[3]
+        stride = sampler.observe(ingested, skipped, recall=recall,
+                                 n_sampled_out=sampled_out)
         ing.set_frame_stride(stride)
         steps.append({"window_lo": lo, "stride": stride,
                       "ingested": int(ingested), "skipped": int(skipped),
+                      "sampled_out": int(sampled_out),
                       "recall": round(recall, 4)})
     idx, stats = ing.finish()
     return {

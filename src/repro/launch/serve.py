@@ -1,28 +1,36 @@
-"""End-to-end Focus serving driver (the paper's deployment shape, §5).
+"""Multi-tenant Focus serving driver (the paper's deployment shape, §5).
 
-Pipeline per stream: sample -> GT-label -> specialize cheap CNN ->
-parameter selection (§4.4) -> ingest (index+clusters) -> serve queries.
-Query workers batch centroid classifications; per-query latency and cost
-are reported against the Ingest-all / Query-all baselines.
+Per stream: sample -> GT-label -> specialize cheap CNN -> parameter
+selection (§4.4) -> ingest (index+clusters) -> serve queries. Queries are
+served through a ``repro.serve.QueryService``: ``--tenants`` concurrent
+tenants submit their class workloads into a bounded request queue, a
+continuous batcher merges every in-flight request into ONE
+``query_many`` / GT pass per cycle (answers byte-identical to serving
+each request alone), and per-tenant latency SLOs (p50/p99, deadline
+misses vs ``--slo-ms``) are reported at the end, against the Ingest-all /
+Query-all cost baselines.
 
   PYTHONPATH=src python -m repro.launch.serve --stream lausanne \
-      --policy balance --duration 60
+      --policy balance --duration 60 --tenants 4
 
-With ``--stream-chunks N`` the ingest runs *streaming*: the stream is fed
-in N chunks through a ``StreamingIngestor`` and the query workload is
-served between chunks from the live, still-growing index
-(query-while-ingest) — each round reports freshness latency and warm-cache
-hit rates. The CNN batch size is scaled down to the chunk so every round
-publishes; the final index is identical to a one-shot run at that same
-batch size (chunking itself never changes the result — only the batch
-size does).
+With ``--stream-chunks N`` the ingest runs *streaming*: the stream's
+chunks are offered to the service, which arbitrates the device between
+ingest and the tenants' queries per ``--service-policy`` — ``query``
+protects query SLOs (chunks wait in a bounded backlog, shedding the
+oldest on overflow per ``--ingest-backlog``), ``ingest`` runs chunks
+first and lets admission control shed query overflow instead. Every
+chunk that ingests is prefetched into the GT-label cache, so warm
+queries between chunks stay off the GT-CNN path. The final index is
+identical to a one-shot run at the same batch size whenever no chunk was
+shed (chunking itself never changes the result — only the batch size
+does).
 
 With ``--archive DIR`` the ingest additionally rolls the live index over
 into time shards (``--shard-objects`` each) sealed under DIR, and the
-query workload is served through an ``ArchiveQueryEngine``: per-round
-queries fan out across every sealed shard plus the live one, with a
-single GT-CNN pass over the uncached candidates of all shards — warm
-rounds survive shard rollovers untouched.
+service queries through an ``ArchiveQueryEngine``: merged batches fan
+out across every sealed shard plus the live one, with a single GT-CNN
+pass over the uncached candidates of all shards — warm rounds survive
+shard rollovers untouched.
 """
 from __future__ import annotations
 
@@ -39,81 +47,118 @@ from repro.core.query import (dominant_classes, gpu_seconds,
                               gt_frames_by_class, precision_recall)
 from repro.core.streaming import StreamingIngestor
 from repro.data import get_stream
+from repro.serve import QueryService, ServiceConfig
+
+
+def _mk_service(engine, args, ingestor=None) -> QueryService:
+    cfg = ServiceConfig(
+        max_queue_depth=args.queue_depth,
+        max_batch_requests=args.batch_requests,
+        policy=args.service_policy,
+        max_ingest_backlog=(args.ingest_backlog
+                            if args.ingest_backlog > 0 else None),
+        default_deadline_s=(args.slo_ms / 1e3 if args.slo_ms > 0 else None))
+    return QueryService(engine, cfg, ingestor=ingestor)
+
+
+def _serve_round(service: QueryService, n_tenants: int, workload):
+    """Submit one request per tenant — the shared dominant-class workload,
+    rotated per tenant so the overlap the batcher dedupes is explicit —
+    and pump the service idle. Returns (responses by tenant, wall_s)."""
+    t0 = time.perf_counter()
+    for t in range(n_tenants):
+        rot = t % max(len(workload), 1)
+        service.submit(f"tenant{t}",
+                       list(workload[rot:]) + list(workload[:rot]))
+    by_tenant = {}
+    for resp in service.run_until_idle():
+        by_tenant[resp.request.tenant] = resp
+    return by_tenant, time.perf_counter() - t0
+
+
+def _round_line(tag, service, by_tenant, wall, gt_delta):
+    n_req = len(by_tenant)
+    n_cls = sum(len(r.results) for r in by_tenant.values())
+    qps = n_cls / max(wall, 1e-9)
+    batch = service.last_batch
+    merged = (f"{batch.n_unique_candidates} unique candidates, "
+              f"{batch.n_cache_hits} cached"
+              if batch is not None and n_req else "no batch ran")
+    print(f"[serve] {tag}: {n_req} tenants x {max(n_cls // max(n_req, 1), 0)}"
+          f" classes in {wall*1e3:.0f}ms ({qps:.1f} QPS) | "
+          f"{service.stats.n_shared_queries} shared pairs lifetime | "
+          f"{merged}, {gt_delta} GT-CNN calls | p99 "
+          f"{service.slo.percentile_s(99.0)*1e3:.1f}ms")
 
 
 def _streaming_ingest(crops, frames, apply_fn, acc_flops, cfg, class_map,
-                      workload, gt_apply, gt_flops, n_chunks):
-    """Feed the stream in chunks, serving the query workload between
-    chunks from the live index. Returns (index, stats, warm engine) — the
-    engine's GT-label cache stays valid for the post-ingest query rounds.
+                      workload, gt_apply, gt_flops, n_chunks, args):
+    """Offer the stream's chunks to the service while tenants query
+    between chunks from the live, still-growing index (query-while-
+    ingest). Returns (index, stats, engine, service) — the engine's
+    GT-label cache stays warm for the post-ingest query rounds.
     """
     ing = StreamingIngestor(apply_fn, acc_flops, cfg, class_map=class_map)
-    engine = None
+    engine = service = None
     bounds = np.linspace(0, len(crops), n_chunks + 1).astype(int)
     for rnd, (lo, hi) in enumerate(zip(bounds, bounds[1:])):
-        t0 = time.perf_counter()
-        ing.feed(crops[lo:hi], frames[lo:hi])
-        feed_ms = (time.perf_counter() - t0) * 1e3
-        # freshness = flush + prefetch + warm queries (ingest excluded,
-        # matching benchmarks/streaming_bench.py)
-        t1 = time.perf_counter()
-        delta = ing.flush()
-        if ing.index is None:
-            continue                       # class width not yet known
-        if engine is None:
+        if service is None and ing.index is not None:
             engine = QueryEngine(ing.index, gt_apply=gt_apply,
                                  gt_flops_per_image=gt_flops)
-        fresh_gt = engine.prefetch(delta.touched_cids)
-        results, batch = engine.query_many(workload)
-        fresh_ms = (time.perf_counter() - t1) * 1e3
-        frames_seen = int(sum(len(r.frames) for r in results))
-        print(f"[serve] chunk {rnd}: +{hi - lo} objs in {feed_ms:.0f}ms "
-              f"({delta.n_objects_published} published, "
-              f"{delta.n_pending_unique} buffered) | "
-              f"{len(delta.touched_cids)} clusters touched, "
-              f"{fresh_gt} prefetched GT | {batch.n_queries} queries warm "
-              f"({batch.n_cache_hits}/{batch.n_unique_candidates} cached, "
-              f"{frames_seen} frames) | freshness {fresh_ms:.0f}ms")
+            service = _mk_service(engine, args, ingestor=ing)
+        if service is None:
+            ing.feed(crops[lo:hi], frames[lo:hi])    # class width unknown
+            ing.flush()
+            continue
+        service.offer_ingest(crops[lo:hi], frames[lo:hi])
+        gt0 = engine.stats.n_gt_invocations
+        chunks0 = service.stats.n_ingest_chunks
+        by_tenant, wall = _serve_round(service, args.tenants, workload)
+        print(f"[serve] chunk {rnd}: +{hi - lo} objs offered "
+              f"({service.stats.n_ingest_chunks - chunks0} ingested, "
+              f"{service.pending_ingest} deferred, "
+              f"{service.stats.n_ingest_shed_chunks} shed lifetime) | "
+              f"{service.stats.n_prefetch_gt} prefetched GT lifetime")
+        _round_line(f"chunk {rnd}", service, by_tenant, wall,
+                    engine.stats.n_gt_invocations - gt0)
+    if service is not None:
+        service.drain_ingest()
     index, stats = ing.finish()
     if engine is not None:
         engine.prefetch(ing.flush().touched_cids)
-    return index, stats, engine
+    return index, stats, engine, service
 
 
 def _archive_ingest(crops, frames, apply_fn, acc_flops, cfg, class_map,
-                    workload, gt_apply, gt_flops, n_chunks, archive_dir,
-                    shard_objects, shard_cache):
-    """Feed the stream in chunks with shard rollover, serving the query
-    workload between chunks through an ``ArchiveQueryEngine`` that spans
-    the sealed shards and the live index. Returns (catalog, stats, engine).
-    """
-    catalog = ShardCatalog.open(archive_dir)
+                    workload, gt_apply, gt_flops, n_chunks, args):
+    """Streaming ingest with shard rollover; merged tenant batches fan out
+    across sealed shards + the live index through an
+    ``ArchiveQueryEngine``. Returns (catalog, stats, engine, service)."""
+    catalog = ShardCatalog.open(args.archive)
     ing = StreamingIngestor(apply_fn, acc_flops, cfg, class_map=class_map,
-                            catalog=catalog, shard_objects=shard_objects)
+                            catalog=catalog,
+                            shard_objects=args.shard_objects)
     engine = ArchiveQueryEngine(catalog, gt_apply=gt_apply,
                                 gt_flops_per_image=gt_flops,
-                                capacity=shard_cache, ingestor=ing)
+                                capacity=args.shard_cache, ingestor=ing)
+    service = _mk_service(engine, args, ingestor=ing)
     bounds = np.linspace(0, len(crops), n_chunks + 1).astype(int)
     for rnd, (lo, hi) in enumerate(zip(bounds, bounds[1:])):
-        t0 = time.perf_counter()
-        ing.feed(crops[lo:hi], frames[lo:hi])
-        feed_ms = (time.perf_counter() - t0) * 1e3
-        t1 = time.perf_counter()
-        delta = ing.flush()
-        fresh_gt = engine.prefetch(delta)
-        results, batch = engine.query_many(workload)
-        fresh_ms = (time.perf_counter() - t1) * 1e3
-        frames_seen = int(sum(len(r.frames) for r in results))
-        print(f"[serve] chunk {rnd}: +{hi - lo} objs in {feed_ms:.0f}ms | "
-              f"{len(delta.sealed_shards)} shards sealed "
-              f"({len(catalog)} total), {fresh_gt} prefetched GT | "
-              f"{batch.n_queries} queries over {batch.n_shards} shards "
-              f"({batch.n_cache_hits}/{batch.n_unique_candidates} cached, "
-              f"{batch.n_shard_loads} shard loads, {frames_seen} frames) | "
-              f"freshness {fresh_ms:.0f}ms")
+        service.offer_ingest(crops[lo:hi], frames[lo:hi])
+        gt0 = engine.stats.n_gt_invocations
+        by_tenant, wall = _serve_round(service, args.tenants, workload)
+        batch = service.last_batch
+        shards = (f"{batch.n_shards} shards, {batch.n_shard_loads} loads"
+                  if batch is not None else "no batch")
+        print(f"[serve] chunk {rnd}: +{hi - lo} objs offered | "
+              f"{len(catalog)} shards sealed ({shards}) | "
+              f"{service.stats.n_prefetch_gt} prefetched GT lifetime")
+        _round_line(f"chunk {rnd}", service, by_tenant, wall,
+                    engine.stats.n_gt_invocations - gt0)
+    service.drain_ingest()
     ing.finish()
     engine.prefetch(ing.flush())
-    return catalog, ing.stats, engine
+    return catalog, ing.stats, engine, service
 
 
 def main():
@@ -128,6 +173,25 @@ def main():
     ap.add_argument("--rounds", type=int, default=3,
                     help="query-workload rounds (round 1 is cold, the rest "
                          "exercise the warm GT-label cache)")
+    ap.add_argument("--tenants", type=int, default=4,
+                    help="concurrent tenants submitting the query workload "
+                         "each round")
+    ap.add_argument("--service-policy", default="query",
+                    choices=["query", "ingest"],
+                    help="backpressure policy when ingest and queries "
+                         "contend: 'query' defers/sheds ingest chunks, "
+                         "'ingest' runs chunks first and sheds query "
+                         "overflow via admission control")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="per-request latency SLO deadline in ms "
+                         "(0 = no deadline accounting)")
+    ap.add_argument("--queue-depth", type=int, default=256,
+                    help="admission bound on queued requests")
+    ap.add_argument("--batch-requests", type=int, default=32,
+                    help="max requests merged into one batch cycle")
+    ap.add_argument("--ingest-backlog", type=int, default=0,
+                    help="max deferred ingest chunks before the oldest is "
+                         "shed (0 = unbounded, never shed)")
     ap.add_argument("--stream-chunks", type=int, default=0,
                     help="feed the stream in N chunks and serve the query "
                          "workload between chunks (query-while-ingest); "
@@ -174,7 +238,7 @@ def main():
     cfg = IngestConfig(K=choice.candidate.K, threshold=choice.candidate.T,
                        max_clusters=2048)
     t0 = time.perf_counter()
-    engine = None
+    engine = service = None
     index = None
     if args.archive or args.stream_chunks > 0:
         # freshness scales with the CNN batch cut: size batches to the
@@ -187,10 +251,9 @@ def main():
                                   batch_size=max(16, min(cfg.batch_size,
                                                          chunk)))
     if args.archive:
-        catalog, stats, engine = _archive_ingest(
+        catalog, stats, engine, service = _archive_ingest(
             crops, frames, models[mid][0], models[mid][1], cfg, cmaps[mid],
-            workload, gtf_apply, GT_FLOPS, n_chunks, args.archive,
-            args.shard_objects, args.shard_cache)
+            workload, gtf_apply, GT_FLOPS, n_chunks, args)
         print(f"[serve] archive: {len(catalog)} shards "
               f"({sum(m.n_clusters for m in catalog)} clusters / "
               f"{sum(m.n_objects for m in catalog)} objects) sealed under "
@@ -198,9 +261,9 @@ def main():
               f"(GPU-cost {gpu_seconds(stats.cheap_flops):.1f} GPU-s vs "
               f"Ingest-all {gpu_seconds(len(crops)*GT_FLOPS):.1f} GPU-s)")
     elif args.stream_chunks > 0:
-        index, stats, engine = _streaming_ingest(
+        index, stats, engine, service = _streaming_ingest(
             crops, frames, models[mid][0], models[mid][1], cfg, cmaps[mid],
-            workload, gtf_apply, GT_FLOPS, args.stream_chunks)
+            workload, gtf_apply, GT_FLOPS, args.stream_chunks, args)
     else:
         index, stats = ingest(crops, frames, models[mid][0], models[mid][1],
                               cfg, class_map=cmaps[mid])
@@ -221,44 +284,68 @@ def main():
             index.save(args.index_out)
             print(f"[serve] index persisted to {args.index_out}.(json|npz)")
 
-    # serve the dominant-class workload through the batched engine: one
-    # union + one GT-CNN pass for the whole concurrent batch, centroid
-    # verdicts cached across repeated rounds (steady-state query traffic).
-    # In streaming mode the interleaved rounds' engine carries its warm
+    # steady-state traffic: every round, all tenants submit the dominant-
+    # class workload; the service merges each round's in-flight requests
+    # into one union + one GT-CNN pass, centroid verdicts cached across
+    # rounds. In streaming mode the chunk rounds' service carries its warm
     # GT-label cache straight into these rounds.
     if engine is None:
         engine = QueryEngine(index, gt_apply=gtf_apply,
                              gt_flops_per_image=GT_FLOPS)
+    if service is None:
+        service = _mk_service(engine, args)
     gtf = gt_frames_by_class(labels, frames)
     ps, rs = [], []
-    last = None
+    last_wall = last_ncls = None
     for rnd in range(max(args.rounds, 1)):
-        results, batch = engine.query_many(workload)
-        last = batch
-        qps = batch.n_queries / max(batch.wall_s, 1e-9)
-        print(f"[serve] round {rnd}: {batch.n_queries} queries in "
-              f"{batch.wall_s*1e3:.0f}ms ({qps:.1f} QPS) | candidates "
-              f"{batch.n_candidates} -> {batch.n_unique_candidates} unique, "
-              f"{batch.n_cache_hits} cached, {batch.n_gt_invocations} "
-              f"GT-CNN calls ({gpu_seconds(batch.gt_flops)*1e3:.1f} GPU-ms "
-              f"vs Query-all "
-              f"{gpu_seconds(len(crops)*GT_FLOPS)*1e3:.1f} GPU-ms)")
+        gt0 = engine.stats.n_gt_invocations
+        by_tenant, wall = _serve_round(service, args.tenants, workload)
+        if not by_tenant:
+            continue
+        last_wall = wall
+        last_ncls = sum(len(r.results) for r in by_tenant.values())
+        _round_line(f"round {rnd}", service, by_tenant, wall,
+                    engine.stats.n_gt_invocations - gt0)
         if rnd > 0:
             continue                  # accuracy identical across rounds
-        for x, res in zip(workload, results):
+        resp0 = by_tenant.get("tenant0")
+        if resp0 is None:
+            continue
+        for x, res in zip(workload, resp0.results):
             p, r = precision_recall(res.frames, gtf.get(x, np.array([])))
             ps.append(p)
             rs.append(r)
             print(f"  query class={x:4d}: {len(res.frames):5d} frames, "
                   f"{res.n_candidate_clusters:4d} candidates, "
                   f"{res.n_gt_invocations:4d} fresh GT-CNN calls "
-                  f"P={p:.3f} R={r:.3f} wall={res.wall_s*1e3:.1f}ms")
-    print(f"[serve] avg P={np.mean(ps):.3f} R={np.mean(rs):.3f} | last "
-          f"round {last.wall_s*1e3:.1f}ms "
-          f"({last.n_queries / max(last.wall_s, 1e-9):.1f} QPS, "
-          f"{last.wall_s / max(last.n_queries, 1) * 1e3:.2f}ms/query amortized)"
-          f" | lifetime GT calls {engine.stats.n_gt_invocations} for "
-          f"{engine.stats.n_candidates} served candidates")
+                  f"P={p:.3f} R={r:.3f}")
+
+    # summary — guarded: an empty dominant-class workload (or a stream
+    # with no surviving objects) serves zero queries and must not push
+    # np.mean through an empty list (NaN + RuntimeWarning)
+    if not ps or last_wall is None or not last_ncls:
+        print("[serve] no queries served (empty dominant-class workload "
+              "or no surviving objects)")
+    else:
+        print(f"[serve] avg P={np.mean(ps):.3f} R={np.mean(rs):.3f} | last "
+              f"round {last_wall*1e3:.1f}ms "
+              f"({last_ncls / max(last_wall, 1e-9):.1f} QPS, "
+              f"{last_wall / last_ncls * 1e3:.2f}ms/query amortized) | "
+              f"lifetime GT calls {engine.stats.n_gt_invocations} for "
+              f"{engine.stats.n_candidates} served candidates")
+    svc = service.stats
+    print(f"[serve] service: {svc.n_completed} requests "
+          f"({svc.n_rejected} rejected) in {svc.n_merged_calls} merged "
+          f"calls | {svc.n_merged_queries} unique pairs, "
+          f"{svc.n_shared_queries} shared | ingest {svc.n_ingest_chunks} "
+          f"chunks ({svc.n_ingest_deferred} chunk-cycles deferred, "
+          f"{svc.n_ingest_shed_chunks} shed)")
+    for ts in service.slo:
+        p50 = f"{ts.p50_s*1e3:.1f}" if ts.latencies_s else "-"
+        p99 = f"{ts.p99_s*1e3:.1f}" if ts.latencies_s else "-"
+        print(f"  {ts.tenant}: {ts.n_completed}/{ts.n_submitted} served "
+              f"p50={p50}ms p99={p99}ms deadline_missed="
+              f"{ts.n_deadline_missed} rejected={ts.n_rejected}")
     return 0
 
 

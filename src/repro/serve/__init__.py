@@ -1,0 +1,17 @@
+"""Multi-tenant query serving layer (DESIGN.md §12): request queue +
+admission control, a continuous batcher merging all in-flight queries
+into one ``query_many`` per cycle, per-tenant latency-SLO accounting,
+and ingest/query backpressure."""
+from repro.serve.service import (QueryRequest, QueryResponse, QueryService,
+                                 ServiceConfig, ServiceStats)
+from repro.serve.slo import LatencyTracker, TenantStats
+
+__all__ = [
+    "LatencyTracker",
+    "QueryRequest",
+    "QueryResponse",
+    "QueryService",
+    "ServiceConfig",
+    "ServiceStats",
+    "TenantStats",
+]

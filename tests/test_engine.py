@@ -241,3 +241,25 @@ def test_incremental_ranks_match_full_rebuild(seed):
         index._ranks = None
         index._build()
         np.testing.assert_array_equal(incremental, index._ranks)
+
+
+def test_kx_bool_rejected():
+    """Regression: ``bool`` is a subclass of ``int``, so ``Kx=True`` used
+    to slip through the scalar check and silently query with Kx=1 (and
+    ``False`` with Kx=0) — almost always a flag passed into the wrong
+    argument slot. Both scalar and per-query bools must raise."""
+    from repro.core.engine import normalize_kx
+
+    index = _mk_index(10)
+    engine = QueryEngine(index, gt_apply=_gt_apply)
+    with pytest.raises(TypeError, match="bool"):
+        engine.query_many([0, 1], Kx=True)
+    with pytest.raises(TypeError, match="bool"):
+        engine.query_many([0, 1], Kx=False)
+    with pytest.raises(TypeError, match="bool"):
+        engine.query_many([0, 1], Kx=[1, False])
+    with pytest.raises(TypeError, match="bool"):
+        normalize_kx(np.True_, 2)
+    # plain ints and numpy ints still broadcast fine
+    assert normalize_kx(np.int64(2), 3) == [2, 2, 2]
+    assert normalize_kx(None, 2) == [None, None]

@@ -131,3 +131,50 @@ def test_sampler_rejects_bad_bounds():
         AdaptiveSampler(SamplerConfig(min_stride=5, max_stride=2))
     with pytest.raises(ValueError):
         AdaptiveSampler(SamplerConfig(dup_low=0.9, dup_high=0.5))
+
+
+def _windowed_stream_dup(stride, d0=0.9, tau=12.0):
+    """Observable duplicate rate of a temporally-correlated stream at a
+    given stride: consecutive *sampled* frames are S apart, so the
+    tracker/gate only sees duplicates while S stays inside the stream's
+    correlation window (linear falloff, zero beyond tau)."""
+    return d0 * max(0.0, 1.0 - (stride - 1) / tau)
+
+
+def test_sampler_converges_on_content_signal():
+    """The fixed accounting (stride-filtered objects excluded from the
+    duplicate rate) converges to a steady stride inside the hysteresis
+    band instead of ratcheting to max_stride."""
+    s = _sampler(max_stride=30)
+    seen = []
+    for _ in range(40):
+        dup = _windowed_stream_dup(s.stride)
+        n_total = 120
+        n_skipped = int(round(n_total * dup))
+        # what the stride itself removed — reported, never counted
+        n_sampled_out = n_total * (s.stride - 1)
+        s.observe(n_total - n_skipped, n_skipped,
+                  n_sampled_out=n_sampled_out)
+        seen.append(s.stride)
+    # settled: the last windows sit at one stride, inside the band
+    steady = seen[-1]
+    assert seen[-10:] == [steady] * 10
+    assert steady < s.cfg.max_stride
+    cfg = s.cfg
+    assert cfg.dup_low <= _windowed_stream_dup(steady) <= cfg.dup_high
+
+
+def test_sampler_buggy_accounting_ratchets_to_max():
+    """The failure mode the fix removes: folding stride-filtered objects
+    into ``n_skipped`` makes the duplicate rate >= (S-1)/S regardless of
+    content, so the same stream drives the stride to max_stride — the
+    controller feeding on its own output."""
+    s = _sampler(max_stride=30)
+    for _ in range(40):
+        dup = _windowed_stream_dup(s.stride)
+        n_total = 120
+        n_skipped = int(round(n_total * dup))
+        n_sampled_out = n_total * (s.stride - 1)
+        # the old call site: stride skips counted as content redundancy
+        s.observe(n_total - n_skipped, n_skipped + n_sampled_out)
+    assert s.stride == s.cfg.max_stride

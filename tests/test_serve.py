@@ -1,0 +1,400 @@
+"""QueryService: multi-tenant continuous batching, admission control,
+SLO accounting, and ingest/query backpressure.
+
+Core property (the safety net for every future serving refactor):
+**service equivalence** — N tenants' interleaved requests through the
+continuous batcher return byte-identical frame sets to sequential
+``query_many`` per tenant (each tenant on its own engine), including
+across an archive shard rollover mid-flight — while the shared engine
+issues strictly fewer GT-CNN invocations than the per-tenant total.
+"""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.archive import ArchiveQueryEngine, ShardCatalog
+from repro.core.engine import QueryEngine
+from repro.core.ingest import IngestConfig, ingest
+from repro.core.streaming import StreamingIngestor
+from repro.serve import QueryService, ServiceConfig
+
+FEAT_DIM = 12
+N_CLASSES = 5
+GT_FLOPS = 1e9
+
+
+def _cheap(batch):
+    flat = batch.reshape(len(batch), -1)
+    feats = (flat[:, :FEAT_DIM] * 10.0).astype(np.float32)
+    probs = np.abs(flat[:, FEAT_DIM:FEAT_DIM + N_CLASSES]) + 1e-3
+    return (probs / probs.sum(1, keepdims=True)).astype(np.float32), feats
+
+
+def _gt_apply(batch):
+    return np.rint(batch[:, 0, 0, 2] * 8).astype(np.int64) % N_CLASSES
+
+
+def _stream(seed, n=300):
+    r = np.random.default_rng(seed)
+    modes = r.random((20, 6, 6, 3)).astype(np.float32)
+    pick = r.integers(0, 20, n)
+    crops = np.clip(modes[pick] + r.normal(0, 0.05, (n, 6, 6, 3)), 0, 1
+                    ).astype(np.float32)
+    frames = np.sort(r.integers(0, max(n // 5, 2), n))
+    return crops, frames
+
+
+CFG = IngestConfig(K=3, threshold=1.5, max_clusters=64, batch_size=32)
+
+
+def _mk_engine(seed, n=300):
+    crops, frames = _stream(seed, n)
+    index, _ = ingest(crops, frames, _cheap, 1.0, CFG,
+                      n_local_classes=N_CLASSES)
+    return index
+
+
+def _frames_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# service equivalence: batched == sequential per tenant
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(st.data())
+def test_batched_service_equals_sequential_per_tenant(data):
+    """Random tenants, random per-request class subsets and Kx, random
+    batch-cycle size: every response's frame sets are byte-identical to
+    the same request served alone on a per-tenant engine, and the shared
+    engine classifies strictly fewer crops than the per-tenant engines
+    combined (cross-tenant dedup)."""
+    seed = data.draw(st.integers(0, 10_000), label="seed")
+    n_tenants = data.draw(st.integers(2, 4), label="n_tenants")
+    max_batch = data.draw(st.sampled_from([1, 2, 32]), label="max_batch")
+    index = _mk_engine(seed)
+    engine = QueryEngine(index, gt_apply=_gt_apply,
+                         gt_flops_per_image=GT_FLOPS)
+    service = QueryService(engine,
+                           ServiceConfig(max_batch_requests=max_batch))
+
+    # interleaved submissions: each tenant sends 2 requests with its own
+    # class subset / Kx; overlap across tenants is what batching dedupes
+    plans = []                       # (tenant, classes, Kx)
+    for t in range(n_tenants):
+        for _ in range(2):
+            n_cls = data.draw(st.integers(1, 4), label="n_cls")
+            classes = [data.draw(st.integers(0, N_CLASSES - 1))
+                       for _ in range(n_cls)]
+            Kx = data.draw(st.sampled_from([None, 1, 2]), label="Kx")
+            plans.append((f"tenant{t}", classes, Kx))
+    for tenant, classes, Kx in plans:
+        assert service.submit(tenant, classes, Kx=Kx) is not None
+    responses = service.run_until_idle()
+    assert len(responses) == len(plans)
+    assert service.stats.n_merged_calls == -(-len(plans) // max_batch)
+
+    # reference: one fresh engine per tenant, requests replayed in order
+    ref_engines = {f"tenant{t}": QueryEngine(index, gt_apply=_gt_apply,
+                                             gt_flops_per_image=GT_FLOPS)
+                   for t in range(n_tenants)}
+    for resp, (tenant, classes, Kx) in zip(responses, plans):
+        assert resp.request.tenant == tenant
+        ref_results, _ = ref_engines[tenant].query_many(classes, Kx)
+        assert len(resp.results) == len(ref_results)
+        for got, ref in zip(resp.results, ref_results):
+            assert got.queried_class == ref.queried_class
+            assert got.matched_clusters == ref.matched_clusters
+            _frames_equal(got.frames, ref.frames)
+
+    # shared engine never pays more GT than the per-tenant engines; with
+    # random (possibly disjoint) workloads strictness isn't guaranteed —
+    # the deterministic overlap test below pins the strict case
+    seq_gt = sum(e.stats.n_gt_invocations for e in ref_engines.values())
+    assert engine.stats.n_gt_invocations <= seq_gt
+
+
+def test_overlapping_tenants_strictly_fewer_gt_calls():
+    """Three tenants asking for the same classes: the batcher dedupes the
+    (class, Kx) pairs, so the shared engine verifies each candidate
+    cluster once while per-tenant engines each pay for their own copy."""
+    index = _mk_engine(2)
+    engine = QueryEngine(index, gt_apply=_gt_apply,
+                         gt_flops_per_image=GT_FLOPS)
+    service = QueryService(engine)
+    classes = list(range(N_CLASSES))
+    for t in range(3):
+        service.submit(f"tenant{t}", classes)
+    service.run_until_idle()
+    assert service.stats.n_shared_queries == 2 * N_CLASSES
+
+    seq_gt = 0
+    for _ in range(3):
+        ref = QueryEngine(index, gt_apply=_gt_apply,
+                          gt_flops_per_image=GT_FLOPS)
+        ref.query_many(classes)
+        seq_gt += ref.stats.n_gt_invocations
+    assert engine.stats.n_gt_invocations > 0
+    assert engine.stats.n_gt_invocations < seq_gt
+
+
+def test_service_equivalence_across_shard_rollover():
+    """Mixed query+ingest schedule through an ``ArchiveQueryEngine``:
+    shards seal mid-flight between batch cycles, and every response stays
+    byte-identical to per-tenant sequential ``query_many`` replayed at
+    the same schedule points on an identical second archive."""
+    crops, frames = _stream(3, n=360)
+    bounds = np.linspace(0, len(crops), 7).astype(int)
+    tenants = ["tenant0", "tenant1", "tenant2"]
+    workloads = {"tenant0": [0, 1, 2], "tenant1": [1, 2, 3],
+                 "tenant2": [2, 3, 4]}
+
+    with tempfile.TemporaryDirectory() as d:
+        cat_a = ShardCatalog.open(os.path.join(d, "a"))
+        ing_a = StreamingIngestor(_cheap, 1.0, CFG,
+                                  n_local_classes=N_CLASSES,
+                                  catalog=cat_a, shard_objects=100)
+        eng_a = ArchiveQueryEngine(cat_a, gt_apply=_gt_apply,
+                                   gt_flops_per_image=GT_FLOPS,
+                                   capacity=2, ingestor=ing_a)
+        # ingest-priority: each offered chunk ingests before the cycle's
+        # merged batch, so the reference schedule below is exact;
+        # max_batch_requests=2 forces two cycles per 3-tenant round
+        service = QueryService(
+            eng_a, ServiceConfig(policy="ingest", max_batch_requests=2),
+            ingestor=ing_a)
+
+        cat_b = ShardCatalog.open(os.path.join(d, "b"))
+        ing_b = StreamingIngestor(_cheap, 1.0, CFG,
+                                  n_local_classes=N_CLASSES,
+                                  catalog=cat_b, shard_objects=100)
+        ref_engines = {t: ArchiveQueryEngine(cat_b, gt_apply=_gt_apply,
+                                             gt_flops_per_image=GT_FLOPS,
+                                             capacity=2, ingestor=ing_b)
+                       for t in tenants}
+
+        sealed_during_rounds = 0
+        for lo, hi in zip(bounds, bounds[1:]):
+            service.offer_ingest(crops[lo:hi], frames[lo:hi])
+            for t in tenants:
+                assert service.submit(t, workloads[t]) is not None
+            n_shards_before = len(cat_a)
+            responses = service.run_until_idle()
+            sealed_during_rounds += len(cat_a) - n_shards_before
+            assert len(responses) == len(tenants)
+
+            # replay the same point on archive B: chunk first (the
+            # ingest-priority cycle order), then each tenant alone
+            ing_b.feed(crops[lo:hi], frames[lo:hi])
+            ing_b.flush()
+            by_tenant = {r.request.tenant: r for r in responses}
+            for t in tenants:
+                ref_results, _ = ref_engines[t].query_many(workloads[t])
+                got = by_tenant[t].results
+                assert len(got) == len(ref_results)
+                for g, ref in zip(got, ref_results):
+                    assert g.queried_class == ref.queried_class
+                    assert g.matched == ref.matched
+                    _frames_equal(g.frames, ref.frames)
+        assert sealed_during_rounds >= 2     # rollover really happened
+        assert len(cat_a) == len(cat_b)
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def test_admission_rejects_when_queue_full():
+    engine = QueryEngine(_mk_engine(4), gt_apply=_gt_apply)
+    service = QueryService(engine, ServiceConfig(max_queue_depth=2))
+    assert service.submit("a", [0]) is not None
+    assert service.submit("b", [1]) is not None
+    assert service.submit("c", [2]) is None          # shed
+    assert service.stats.n_rejected == 1
+    assert service.tenant_stats("c").n_rejected == 1
+    assert service.tenant_stats("c").n_submitted == 1
+    responses = service.run_until_idle()
+    assert len(responses) == 2                       # shed request never ran
+    assert service.submit("c", [2]) is not None      # queue drained
+
+
+def test_admission_per_tenant_inflight_cap():
+    engine = QueryEngine(_mk_engine(5), gt_apply=_gt_apply)
+    service = QueryService(engine,
+                           ServiceConfig(max_inflight_per_tenant=1))
+    assert service.submit("a", [0]) is not None
+    assert service.submit("a", [1]) is None          # over the cap
+    assert service.submit("b", [1]) is not None      # other tenants fine
+    service.run_until_idle()
+    assert service.submit("a", [1]) is not None      # cap released
+
+
+def test_submit_validates_kx_before_admission():
+    """A malformed request is rejected at submit — it must never poison a
+    merged batch cycle (regression companion to the bool-Kx engine fix)."""
+    engine = QueryEngine(_mk_engine(6), gt_apply=_gt_apply)
+    service = QueryService(engine)
+    with pytest.raises(TypeError):
+        service.submit("a", [0, 1], Kx=True)
+    with pytest.raises(ValueError):
+        service.submit("a", [0, 1], Kx=[1])          # length mismatch
+    assert service.pending_queries == 0
+
+
+# ---------------------------------------------------------------------------
+# backpressure
+# ---------------------------------------------------------------------------
+
+def _mk_streaming_service(policy, **cfg_kw):
+    ing = StreamingIngestor(_cheap, 1.0, CFG, n_local_classes=N_CLASSES)
+    engine = QueryEngine(ing.index, gt_apply=_gt_apply,
+                         gt_flops_per_image=GT_FLOPS)
+    service = QueryService(engine, ServiceConfig(policy=policy, **cfg_kw),
+                           ingestor=ing)
+    return ing, engine, service
+
+
+def test_query_priority_defers_ingest_until_idle():
+    ing, engine, service = _mk_streaming_service("query")
+    crops, frames = _stream(7, n=120)
+    service.offer_ingest(crops[:60], frames[:60])
+    service.offer_ingest(crops[60:], frames[60:])
+    service.submit("a", [0, 1])
+    responses = service.step()
+    # queries ran, both chunks deferred: nothing was fed to the ingestor
+    assert len(responses) == 1
+    assert ing.stats.n_objects == 0
+    assert service.stats.n_ingest_deferred == 2
+    assert service.pending_ingest == 2
+    service.step()                       # idle cycle: one chunk ingests
+    assert service.stats.n_ingest_chunks == 1
+    assert ing.stats.n_objects == 60
+    service.run_until_idle()
+    assert service.pending_ingest == 0
+    assert ing.stats.n_objects == 120
+
+
+def test_query_priority_sheds_oldest_chunk_on_backlog_overflow():
+    ing, engine, service = _mk_streaming_service(
+        "query", max_ingest_backlog=2)
+    crops, frames = _stream(8, n=150)
+    thirds = [(crops[i:i + 50], frames[i:i + 50]) for i in (0, 50, 100)]
+    service.submit("a", [0])             # queries pin the backlog
+    assert service.offer_ingest(*thirds[0])
+    assert service.offer_ingest(*thirds[1])
+    assert not service.offer_ingest(*thirds[2])      # overflow: shed oldest
+    assert service.stats.n_ingest_shed_chunks == 1
+    assert service.stats.n_ingest_shed_objects == 50
+    assert service.pending_ingest == 2
+    service.run_until_idle()
+    # the oldest chunk is gone; the two freshest ingested in order
+    assert ing.stats.n_objects == 100
+    assert service.stats.n_ingest_chunks == 2
+
+
+def test_ingest_priority_ingests_before_the_batch():
+    ing, engine, service = _mk_streaming_service("ingest")
+    crops, frames = _stream(9, n=80)
+    service.offer_ingest(crops, frames)
+    service.submit("a", list(range(N_CLASSES)))
+    responses = service.step()
+    assert service.stats.n_ingest_chunks == 1
+    assert ing.stats.n_objects == 80
+    assert len(responses) == 1
+    # the cycle's answers see the chunk: identical to feed-then-query
+    ing2 = StreamingIngestor(_cheap, 1.0, CFG, n_local_classes=N_CLASSES)
+    ing2.feed(crops, frames)
+    ing2.flush()
+    ref, _ = QueryEngine(ing2.index, gt_apply=_gt_apply).query_many(
+        list(range(N_CLASSES)))
+    for got, want in zip(responses[0].results, ref):
+        _frames_equal(got.frames, want.frames)
+
+
+def test_prefetch_moves_gt_off_the_query_path():
+    ing, engine, service = _mk_streaming_service("ingest")
+    crops, frames = _stream(10, n=80)
+    service.offer_ingest(crops, frames)
+    service.submit("a", list(range(N_CLASSES)))
+    responses = service.run_until_idle()
+    assert service.stats.n_prefetch_gt > 0
+    # every candidate the batch touched was already cached by prefetch
+    assert service.last_batch.n_gt_invocations == 0
+    assert all(r.n_gt_invocations == 0
+               for resp in responses for r in resp.results)
+
+
+# ---------------------------------------------------------------------------
+# SLO accounting
+# ---------------------------------------------------------------------------
+
+def test_deadline_accounting_with_injected_clock():
+    t = [0.0]
+    engine = QueryEngine(_mk_engine(11), gt_apply=_gt_apply)
+    service = QueryService(engine, clock=lambda: t[0])
+    service.submit("a", [0], deadline_s=0.5)
+    service.submit("b", [0], deadline_s=5.0)
+    t[0] = 1.0                           # both complete at t=1.0
+    responses = service.run_until_idle()
+    by_tenant = {r.request.tenant: r for r in responses}
+    assert by_tenant["a"].deadline_missed
+    assert not by_tenant["b"].deadline_missed
+    assert by_tenant["a"].latency_s == pytest.approx(1.0)
+    ts = service.tenant_stats("a")
+    assert ts.n_deadline_missed == 1 and ts.n_completed == 1
+    assert ts.p50_s == pytest.approx(1.0)
+    assert ts.p99_s == pytest.approx(1.0)
+    assert service.slo.percentile_s(50.0) == pytest.approx(1.0)
+
+
+def test_default_deadline_from_config():
+    t = [0.0]
+    engine = QueryEngine(_mk_engine(12), gt_apply=_gt_apply)
+    service = QueryService(
+        engine, ServiceConfig(default_deadline_s=0.25),
+        clock=lambda: t[0])
+    service.submit("a", [0])
+    t[0] = 0.5
+    (resp,) = service.run_until_idle()
+    assert resp.deadline_missed
+    # rejected requests never enter the latency distribution
+    assert service.tenant_stats("a").latencies_s == [resp.latency_s]
+
+
+def test_empty_tracker_percentiles_are_nan():
+    engine = QueryEngine(_mk_engine(13), gt_apply=_gt_apply)
+    service = QueryService(engine)
+    assert np.isnan(service.slo.percentile_s(99.0))
+    assert np.isnan(service.tenant_stats("ghost").p50_s)
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+def test_service_config_validation():
+    with pytest.raises(ValueError):
+        ServiceConfig(policy="balanced")
+    with pytest.raises(ValueError):
+        ServiceConfig(max_queue_depth=0)
+    with pytest.raises(ValueError):
+        ServiceConfig(max_batch_requests=0)
+    with pytest.raises(ValueError):
+        ServiceConfig(max_ingest_backlog=0)
+    with pytest.raises(ValueError):
+        ServiceConfig(max_inflight_per_tenant=0)
+    with pytest.raises(ValueError):
+        ServiceConfig(ingest_chunks_per_cycle=0)
+
+
+def test_offer_ingest_without_ingestor_raises():
+    engine = QueryEngine(_mk_engine(14), gt_apply=_gt_apply)
+    service = QueryService(engine)
+    with pytest.raises(ValueError):
+        service.offer_ingest(np.zeros((1, 6, 6, 3), np.float32),
+                             np.zeros(1, np.int64))
