@@ -112,6 +112,12 @@ def get_model(stream_name: str, model_id: str,
     def apply_fn(batch):
         return inner(_resize(batch, cfg.input_res))
 
+    # the jax-traceable core for fused/sharded pipelines (the host wrapper
+    # above pads with numpy and cannot be traced); _resize is np fancy
+    # indexing with static shapes, traceable on jax arrays as-is
+    fwd = sm.make_traceable()
+    apply_fn.traceable = lambda batch: fwd(_resize(batch, cfg.input_res))
+    apply_fn.input_res = cfg.input_res
     return apply_fn, GT_FLOPS / divisor, sm.class_map
 
 

@@ -142,7 +142,11 @@ def _check_dispatcher(project: ProjectIndex, fi: FuncInfo, emit):
             if canon == "jax.device_get":
                 emit(fi, node, "host-sync",
                      f"jax.device_get in hot-path function '{name}' — "
-                     f"synchronous device fetch stalls async dispatch")
+                     f"synchronous device fetch stalls async dispatch; "
+                     f"sanctioned only at the designed (j, matched) fold "
+                     f"boundary (one whole-batch fetch per resolved step "
+                     f"— DESIGN.md §9/§13), and must carry a suppression "
+                     f"naming it")
             elif canon in _NP_CASTS and node.args and \
                     expr_tainted(node.args[0]):
                 emit(fi, node, "host-sync",

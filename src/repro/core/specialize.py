@@ -57,6 +57,20 @@ class SpecializedModel:
 
         return apply
 
+    def make_traceable(self) -> Callable:
+        """The bare jax-traceable forward ``crops -> (probs, feats)`` —
+        what a fused ``IngestPipeline``/``ShardedIngestPipeline`` inlines
+        into its megastep (``make_apply`` wraps the same computation in a
+        host pad/unpad boundary, which cannot be traced)."""
+        cfg = self.cfg
+        params = self.params
+
+        def fwd(crops):
+            logits, feats = cnn.forward(params, crops, cfg)
+            return jax.nn.softmax(logits, axis=-1), feats
+
+        return fwd
+
 
 def estimate_distribution(gt_labels: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     """(classes, counts) sorted by decreasing frequency."""

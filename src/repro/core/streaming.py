@@ -879,35 +879,122 @@ class StreamingIngestor:
         return self._index, self.stats
 
 
+class StreamPlacement:
+    """Deterministic stream -> device placement for sharded ingest
+    (DESIGN.md §13).
+
+    Pure function of ``(names, n_devices)`` — round-robin in the given
+    name order: stream ``i`` lives on device ``i % n_devices``. The
+    device-major ``slots`` list (each device's block padded with ``None``
+    to a common width) is exactly the slot layout a
+    ``ShardedIngestPipeline`` stacks along its leading stream axis, so
+    the placement — and with it every stream's device and stacked row —
+    is reproducible across runs and independent of feed() chunking.
+    """
+
+    def __init__(self, names, n_devices: int):
+        names = list(names)
+        if not names:
+            raise ValueError("need at least one stream name")
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate stream names in {names!r}")
+        if n_devices < 1:
+            raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+        self.names = names
+        self.n_devices = n_devices
+        self.width = -(-len(names) // n_devices)        # ceil
+        blocks: List[List[Optional[str]]] = [[] for _ in range(n_devices)]
+        for i, nm in enumerate(names):
+            blocks[i % n_devices].append(nm)
+        for b in blocks:
+            b.extend([None] * (self.width - len(b)))
+        self.slots: List[Optional[str]] = [nm for b in blocks for nm in b]
+        self._slot_of = {nm: s for s, nm in enumerate(self.slots)
+                         if nm is not None}
+
+    @property
+    def n_slots(self) -> int:
+        return len(self.slots)
+
+    def slot_of(self, name: str) -> int:
+        return self._slot_of[name]
+
+    def device_of(self, name: str) -> int:
+        return self._slot_of[name] // self.width
+
+    def assignment(self) -> Dict[str, int]:
+        """{stream name: device index} — the reproducibility contract."""
+        return {nm: self.device_of(nm) for nm in self.names}
+
+
 class MultiStreamRunner:
     """Round-robins N per-stream ingestors through ONE shared cheap CNN.
 
-    Ready batches (exactly ``cfg.batch_size`` unique crops each) from all
-    streams are stacked into one device batch, bucket-padded to reuse the
-    same compiled executable, classified in a single ``cheap_apply`` call,
-    and split back per stream. Per-stream fold order is preserved, so each
-    stream's index is identical to a self-driven run (``cheap_apply`` must
-    be per-example pure, which holds for the inference CNNs here). When a
-    mesh is given, the stacked batch is placed with
-    ``distributed.sharding.batch_spec`` so the forward pass shards over
-    the data axis.
+    Two modes:
+
+    * **Staged** (``cheap_apply`` given): ready batches (exactly
+      ``cfg.batch_size`` unique crops each) from all streams are stacked
+      into one device batch, bucket-padded to reuse the same compiled
+      executable, classified in a single ``cheap_apply`` call, and split
+      back per stream. When a mesh is given, the stacked batch is placed
+      with ``distributed.sharding.batch_spec`` (sharding hoisted to
+      construction — never rebuilt per step).
+    * **Sharded** (``pipeline`` = a ``ShardedIngestPipeline``): each
+      ingestor was constructed with ``pipeline=shared.handle(name)``;
+      feeds enqueue per-stream batches and every ``step()`` runs ONE
+      sharded megastep over the head batch of each stream (see
+      ``make_sharded_runner``). The runner disables the pipeline's
+      auto-pump so batches stack *across* streams.
+
+    Either way, per-stream fold order is preserved, so each stream's
+    index is byte-identical to a self-driven single-device run
+    (``cheap_apply`` must be per-example pure, which holds for the
+    inference CNNs here).
     """
 
     def __init__(self, ingestors: Mapping[str, StreamingIngestor],
-                 cheap_apply: Callable, batch_pad: int = 64, mesh=None):
+                 cheap_apply: Optional[Callable] = None,
+                 batch_pad: int = 64, mesh=None, pipeline=None,
+                 placement: Optional[StreamPlacement] = None):
         if not ingestors:
             raise ValueError("need at least one ingestor")
-        for name, ing in ingestors.items():
-            if ing.cheap_apply is not None or ing.pipeline is not None:
-                raise ValueError(
-                    f"ingestor {name!r} owns a cheap_apply/pipeline; "
-                    f"runner-driven ingestors must be constructed with "
-                    f"neither")
+        if (cheap_apply is None) == (pipeline is None):
+            raise ValueError(
+                "pass exactly one of cheap_apply (staged stacking) or "
+                "pipeline (ShardedIngestPipeline)")
+        if pipeline is not None:
+            for name, ing in ingestors.items():
+                h = ing.pipeline
+                if h is None or getattr(h, "shared", None) is not pipeline:
+                    raise ValueError(
+                        f"ingestor {name!r} is not bound to this sharded "
+                        f"pipeline; construct it with "
+                        f"pipeline=shared.handle({name!r})")
+            pipeline.auto_pump = False   # runner owns step timing
+        else:
+            for name, ing in ingestors.items():
+                if ing.cheap_apply is not None or ing.pipeline is not None:
+                    raise ValueError(
+                        f"ingestor {name!r} owns a cheap_apply/pipeline; "
+                        f"runner-driven ingestors must be constructed "
+                        f"with neither")
         self.ingestors: Dict[str, StreamingIngestor] = dict(ingestors)
         self.cheap_apply = cheap_apply
         self.batch_pad = batch_pad
         self.mesh = mesh
+        self.pipeline = pipeline
+        self.placement = placement
         self._rotation = list(self.ingestors)
+        # hoisted: the stacked-batch sharding is a pure function of the
+        # mesh; rebuilding it (and re-importing jax) every step was the
+        # old per-step hot-path bug (ISSUE 9 satellite)
+        self._stack_sharding = None
+        if mesh is not None and cheap_apply is not None:
+            import jax
+            from jax.sharding import NamedSharding
+
+            from repro.distributed.sharding import batch_spec
+            self._stack_sharding = NamedSharding(mesh, batch_spec(mesh, 3))
 
     def feed(self, feeds: Mapping[str, Tuple[np.ndarray, np.ndarray]]):
         """Feed per-stream chunks, then fold every ready batch."""
@@ -916,9 +1003,14 @@ class MultiStreamRunner:
         self.drain()
 
     def step(self) -> int:
-        """One stacked device batch: up to one ready batch per stream, in
-        rotating order so streams take turns leading the stack. Returns
-        the number of objects folded (0 = nothing ready)."""
+        """One stacked device batch: up to one ready batch per stream.
+        Staged mode rotates which stream leads the stack; sharded mode
+        folds the head batch of every queued stream in one sharded
+        dispatch. Returns objects folded (0 = nothing ready)."""
+        if self.pipeline is not None:
+            for ing in self.ingestors.values():
+                ing._drain_ready()       # enqueue ready batches
+            return self.pipeline.pump_one()
         parts = []
         for name in self._rotation:
             ing = self.ingestors[name]
@@ -940,16 +1032,10 @@ class MultiStreamRunner:
         stacked = np.concatenate([p[1] for p in parts])
         n = len(stacked)
         padded = pad_to_bucket(stacked, self.batch_pad)
-        if self.mesh is not None:
+        if self._stack_sharding is not None:
             try:
                 import jax
-                from jax.sharding import NamedSharding
-
-                from repro.distributed.sharding import batch_spec
-                padded = jax.device_put(
-                    padded, NamedSharding(self.mesh,
-                                          batch_spec(self.mesh,
-                                                     padded.ndim - 1)))
+                padded = jax.device_put(padded, self._stack_sharding)
             except (ValueError, RuntimeError):
                 pass                     # indivisible batch / CPU fallback
         probs, feats = self.cheap_apply(padded)
@@ -972,9 +1058,45 @@ class MultiStreamRunner:
         """Fold the ragged per-stream tails in one final stacked pass,
         then finalize every ingestor."""
         self.drain()
+        if self.pipeline is not None:
+            # each finish() submits its own tail + flushes the shared
+            # pipeline; catalog'd streams seal themselves
+            return {name: ing.finish()
+                    for name, ing in self.ingestors.items()}
         parts = [(ing, *ing.take_tail())
                  for ing in self.ingestors.values()
                  if ing.n_pending_unique]
         if parts:
             self._fold_stacked(parts)
         return {name: ing.finish() for name, ing in self.ingestors.items()}
+
+
+def make_sharded_runner(cheap_fn: Callable, mesh, stream_names,
+                        cfg: Optional[IngestConfig] = None,
+                        topk_k: Optional[int] = None,
+                        topk_sink: Optional[Callable] = None,
+                        ingestor_kwargs: Optional[Mapping[str, dict]] = None,
+                        **common_kwargs) -> MultiStreamRunner:
+    """Build the full sharded multi-stream stack: a ``StreamPlacement``
+    over ``mesh.size`` devices, one shared ``ShardedIngestPipeline``, one
+    ``StreamingIngestor`` per stream bound to its slot handle, and a
+    ``MultiStreamRunner`` driving it.
+
+    ``ingestor_kwargs`` maps stream name -> extra ``StreamingIngestor``
+    kwargs (e.g. a per-stream ``catalog``); ``common_kwargs`` go to every
+    ingestor. Per-stream cfg overrides are rejected by the pipeline —
+    the stacked cluster tables share one shape/threshold.
+    """
+    from repro.core.pipeline import ShardedIngestPipeline
+    placement = StreamPlacement(stream_names, mesh.size)
+    shared = ShardedIngestPipeline(cheap_fn, mesh, placement.slots,
+                                   cfg=cfg, topk_k=topk_k,
+                                   topk_sink=topk_sink)
+    ingestors = {}
+    for nm in placement.names:
+        kw = dict(common_kwargs)
+        kw.update((ingestor_kwargs or {}).get(nm, {}))
+        kw.setdefault("cfg", cfg)
+        ingestors[nm] = StreamingIngestor(pipeline=shared.handle(nm), **kw)
+    return MultiStreamRunner(ingestors, mesh=mesh, pipeline=shared,
+                             placement=placement)

@@ -174,6 +174,53 @@ def act_spec(mesh: Mesh, kind: str) -> P:
     raise ValueError(kind)
 
 
+# ---------------------------------------------------------------------------
+# Sharded ingest rules (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+#
+# The multi-stream ingest megastep stacks per-stream tensors along a
+# leading STREAM axis and shards only that axis over the 1-D ("data",)
+# ingest mesh (`launch.mesh.make_ingest_mesh`). Every device owns a
+# contiguous device-major block of stream slots — its streams' ClusterState
+# rows live on it for the whole run, so the hot path moves no cluster
+# state between devices; only the small per-stream (j, matched, top-K)
+# rows cross to the host at the designed fold boundary.
+
+
+def stream_spec(mesh: Mesh, extra_rank: int) -> P:
+    """P(data, None * extra_rank) for a stream-major stacked tensor:
+    (S, ...) with S = streams padded to a multiple of the mesh size."""
+    dp, _ = mesh_axes(mesh)
+    return P(dp, *[None] * extra_rank)
+
+
+def ingest_batch_spec(mesh: Mesh) -> P:
+    """Stacked bucket-padded crop batch (S, B, R, R, 3)."""
+    return stream_spec(mesh, 4)
+
+
+def cluster_state_specs(mesh: Mesh) -> tuple:
+    """Per-stream ClusterState placement, stream-major stacked:
+    centroids (S, M, D), counts (S, M), n (S,)."""
+    return (stream_spec(mesh, 2), stream_spec(mesh, 1), stream_spec(mesh, 0))
+
+
+def ingest_shardings(mesh: Mesh) -> dict:
+    """The NamedShardings the sharded ingest pipeline places data with —
+    built ONCE at pipeline construction (never per step; the per-step
+    rebuild was the old MultiStreamRunner hot-path bug)."""
+    cen, cnt, n = cluster_state_specs(mesh)
+    return {
+        "crops": NamedSharding(mesh, ingest_batch_spec(mesh)),
+        "n_real": NamedSharding(mesh, stream_spec(mesh, 0)),
+        "rows": NamedSharding(mesh, stream_spec(mesh, 1)),      # (S, B)
+        "centroids": NamedSharding(mesh, cen),
+        "counts": NamedSharding(mesh, cnt),
+        "n": NamedSharding(mesh, n),
+        "replicated": NamedSharding(mesh, P()),
+    }
+
+
 def constrain(x, mesh: Optional[Mesh], kind: str):
     """with_sharding_constraint if a mesh is given, else no-op (CPU tests)."""
     if mesh is None:

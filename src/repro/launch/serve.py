@@ -91,6 +91,39 @@ def _round_line(tag, service, by_tenant, wall, gt_delta):
           f"{service.slo.percentile_s(99.0)*1e3:.1f}ms")
 
 
+def _mesh_pipeline_handle(args, apply_fn, cfg):
+    """``--mesh-devices N``: route ingest through the sharded megastep
+    over a ``make_ingest_mesh(N)`` mesh (DESIGN.md §13). The serve driver
+    ingests one stream, so the placement is a single slot; the same
+    pipeline stacks many streams in ``core.streaming.make_sharded_runner``.
+    Returns the slot handle to pass as ``StreamingIngestor(pipeline=)``,
+    or None when meshing is off."""
+    if args.mesh_devices <= 0:
+        return None
+    traceable = getattr(apply_fn, "traceable", None)
+    if traceable is None:
+        raise SystemExit(
+            "--mesh-devices needs a jax-traceable model forward "
+            "(apply_fn.traceable); the selected model only exposes a "
+            "host-staged apply")
+    from repro.core.pipeline import ShardedIngestPipeline
+    from repro.core.streaming import StreamPlacement
+    from repro.launch.mesh import make_ingest_mesh
+    mesh = make_ingest_mesh(args.mesh_devices)
+    placement = StreamPlacement([args.stream], mesh.size)
+    shared = ShardedIngestPipeline(traceable, mesh, placement.slots,
+                                   cfg=cfg)
+    return shared.handle(args.stream)
+
+
+def _mk_ingestor(apply_fn, acc_flops, cfg, args, **kw):
+    handle = _mesh_pipeline_handle(args, apply_fn, cfg)
+    if handle is not None:
+        return StreamingIngestor(None, acc_flops, cfg, pipeline=handle,
+                                 **kw)
+    return StreamingIngestor(apply_fn, acc_flops, cfg, **kw)
+
+
 def _streaming_ingest(crops, frames, apply_fn, acc_flops, cfg, class_map,
                       workload, gt_apply, gt_flops, n_chunks, args):
     """Offer the stream's chunks to the service while tenants query
@@ -98,7 +131,7 @@ def _streaming_ingest(crops, frames, apply_fn, acc_flops, cfg, class_map,
     ingest). Returns (index, stats, engine, service) — the engine's
     GT-label cache stays warm for the post-ingest query rounds.
     """
-    ing = StreamingIngestor(apply_fn, acc_flops, cfg, class_map=class_map)
+    ing = _mk_ingestor(apply_fn, acc_flops, cfg, args, class_map=class_map)
     engine = service = None
     bounds = np.linspace(0, len(crops), n_chunks + 1).astype(int)
     for rnd, (lo, hi) in enumerate(zip(bounds, bounds[1:])):
@@ -135,9 +168,8 @@ def _archive_ingest(crops, frames, apply_fn, acc_flops, cfg, class_map,
     across sealed shards + the live index through an
     ``ArchiveQueryEngine``. Returns (catalog, stats, engine, service)."""
     catalog = ShardCatalog.open(args.archive)
-    ing = StreamingIngestor(apply_fn, acc_flops, cfg, class_map=class_map,
-                            catalog=catalog,
-                            shard_objects=args.shard_objects)
+    ing = _mk_ingestor(apply_fn, acc_flops, cfg, args, class_map=class_map,
+                       catalog=catalog, shard_objects=args.shard_objects)
     engine = ArchiveQueryEngine(catalog, gt_apply=gt_apply,
                                 gt_flops_per_image=gt_flops,
                                 capacity=args.shard_cache, ingestor=ing)
@@ -204,8 +236,18 @@ def main():
                     help="archive mode: objects per sealed shard")
     ap.add_argument("--shard-cache", type=int, default=4,
                     help="archive mode: LRU capacity of resident shards")
+    ap.add_argument("--mesh-devices", type=int, default=0,
+                    help="shard streaming/archive ingest over a 1-D "
+                         "('data',) mesh of N devices via the fused "
+                         "sharded megastep (0 = host-staged ingest); on "
+                         "CPU export XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N before launch")
     ap.add_argument("--index-out", default=None)
     args = ap.parse_args()
+    if args.mesh_devices > 0 and not (args.archive
+                                      or args.stream_chunks > 0):
+        raise SystemExit("--mesh-devices needs a streaming ingest path: "
+                         "pass --stream-chunks N and/or --archive DIR")
 
     from benchmarks.common import (GT_FLOPS, SPECIALIZED_FAMILY, get_model,
                                    gt_oracle)

@@ -210,7 +210,46 @@ def test_select_filters_rules(tmp_path):
     assert rules_of(doc) == ["cache-version"]
 
 
+def test_sharded_fetch_without_suppression_is_flagged(tmp_path):
+    """The sharded fold boundary (DESIGN.md §13): a dispatcher doing a
+    device_get of stacked outputs is flagged unless suppressed — an extra
+    sync sneaking into the sharded fetch path cannot land silently — and
+    the message names the one sanctioned boundary."""
+    doc = lint(tmp_path, {"mod.py": (
+        "import jax\n"
+        "@jax.jit\n"
+        "def megastep(x):\n"
+        "    return x * 2, x > 0\n"
+        "def pump_one(x):\n"
+        "    j, matched = megastep(x)\n"
+        "    j_h, m_h = jax.device_get((j, matched))\n"
+        "    return j_h, m_h\n")})
+    assert rules_of(doc) == ["host-sync"]
+    assert "fold boundary" in doc["findings"][0]["message"]
+    assert doc["findings"][0]["line"] == 7
+
+
 # -- the repo itself -----------------------------------------------------------
+
+def test_sharded_pipeline_sync_budget_is_pinned():
+    """Regression fixture (ISSUE 9): core/pipeline.py carries exactly the
+    designed set of sanctioned host syncs. A new ``device_get`` in the
+    sharded (or single-stream) path must either fail the CI lint gate or
+    consciously bump this pin with a justified suppression."""
+    path = os.path.join(REPO_ROOT, "src", "repro", "core", "pipeline.py")
+    report = run_analysis([path])
+    doc = json.loads(report.to_json(show_suppressed=True))
+    assert not [f for f in doc["findings"] if f["rule"] == "host-sync"]
+    syncs = [f for f in doc["suppressed"] if f["rule"] == "host-sync"]
+    # 5 single-stream (staged boundary x2, (j,matched) fetch, bound-gated
+    # n, rare evict) + 3 sharded ((j,matched) stack fetch, fold-rows
+    # fetch, bound-gated (S,) n); the evict/reset slot pulls sit in
+    # non-dispatcher functions, outside the hot path this rule guards
+    assert len(syncs) == 8, sorted(f["line"] for f in syncs)
+    boundary = [f for f in syncs if "fold boundary" in f["justification"]
+                or "designed" in f["justification"]]
+    assert len(boundary) >= 2      # both fold-boundary fetches named
+
 
 def test_repo_attach_exemption_is_suppressed():
     """ClusterStore.attach's count-only mutation is the one sanctioned
