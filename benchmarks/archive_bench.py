@@ -1,4 +1,4 @@
-"""Time-sharded archive: cross-shard query fan-out benchmark.
+"""Time-sharded archive: cross-shard query fan-out + format-tier benchmark.
 
 One synthetic multi-day-shaped stream is ingested through a
 ``StreamingIngestor`` with shard rollover at several shard counts; an
@@ -10,13 +10,27 @@ sealed archive. Reported per shard count:
     rep crops across all shards and all queries into one bucket-padded
     pass — not one pass per shard),
   * shard-loader behaviour under a capacity smaller than the shard count
-    (loads / evictions per query round).
+    (loads / evictions per query round), plus heap residency / hit rate.
+
+A second tier compares the quantized lazy/mmap v4 shard format against
+the fp32 npz v3 baseline over the *identical* stream and rollover:
+
+  * bytes/object on disk (gate: v4 >= 3x smaller),
+  * cold query wall time — manifest open + column load + rank path +
+    frame gather, measured engine-level with oracle labels so the crop
+    column is never touched (gate: v4 >= 2x faster),
+  * lossless-path identity: every v4 shard served lazily (mmap +
+    in-kernel dequant rank) answers lookup/frames byte-identically to
+    the same shard eagerly dequantized to fp32 (gate: exact),
+  * quantized-crop recall: GT-pass answers on uint8 rep-crops vs the
+    fp32 crops of the v3 archive (gate: >= 0.99).
 
 Correctness gates (asserted here and in CI):
   * archive answers equal the union of per-shard ``QueryEngine`` answers,
   * a warm archive query issues zero GT-CNN invocations,
   * the cold pass runs ``ceil(misses / batch_size)`` GT launches total,
-    independent of the shard count.
+    independent of the shard count,
+  * the four format-tier gates above.
 
 One record per run is appended to the BENCH_archive.json trajectory.
 """
@@ -29,7 +43,8 @@ import time
 import numpy as np
 
 from benchmarks.common import append_trajectory, emit
-from repro.core.archive import ArchiveQueryEngine, ShardCatalog
+from repro.core.archive import (ArchiveQueryEngine, ShardCatalog,
+                                ShardLoader)
 from repro.core.engine import QueryEngine
 from repro.core.ingest import IngestConfig
 from repro.core.streaming import StreamingIngestor
@@ -46,6 +61,8 @@ GT_BATCH = 256                # GT-CNN batch size inside the engines
 SHARD_COUNTS = (1, 4, 8)
 LRU_CAPACITY = 2              # < max(SHARD_COUNTS): forces evictions
 GT_FLOPS = 1.2e11
+FMT_SHARDS = 8                # shard count for the v3-vs-v4 format tier
+COLD_REPS = 3                 # cold-load reps per format (min reported)
 
 
 def _make_stream(seed: int):
@@ -86,6 +103,120 @@ class _CountingGT:
         self.n_calls += 1
         return np.rint(batch[:, 0, 0, 0] * N_CLASSES).astype(np.int64) \
             % N_CLASSES
+
+
+def _build_archive(root, crops, frames, cfg, shard_format):
+    """Ingest the stream into ``root`` with rollover at FMT_SHARDS."""
+    catalog = ShardCatalog.open(root)
+    ing = StreamingIngestor(_cheap, 1e9, cfg, catalog=catalog,
+                            shard_objects=-(-N_OBJECTS // FMT_SHARDS),
+                            shard_format=shard_format)
+    for lo in range(0, N_OBJECTS, 1024):
+        ing.feed(crops[lo:lo + 1024], frames[lo:lo + 1024])
+    ing.finish()
+    assert len(catalog) == FMT_SHARDS
+    return catalog
+
+
+def _cold_load_ms(catalog, workload):
+    """Wall time of the cold load+rank path over every shard: fresh
+    loader, ``get`` + one ``lookup`` per class. v3 pays the full npz
+    decode of every column here; v4 opens the manifest, mmaps the prob
+    column and ranks in-kernel — the crop/log columns are never read."""
+    best = float("inf")
+    for _ in range(COLD_REPS):
+        loader = ShardLoader(catalog)
+        t0 = time.perf_counter()
+        for m in catalog:
+            idx = loader.get(m.shard_id)
+            for cls in workload:
+                idx.lookup(cls)
+        best = min(best, (time.perf_counter() - t0) * 1e3)
+    return best
+
+
+def _cold_query_ms(catalog, labels, workload):
+    """Wall time of one fully cold archive query round: fresh engine +
+    loader, oracle labels (the crop column is never read). Includes the
+    per-candidate frame gather, which is format-independent — reported
+    for context, not gated."""
+    best = float("inf")
+    for _ in range(COLD_REPS):
+        engine = ArchiveQueryEngine(catalog, oracle_labels=labels,
+                                    batch_size=GT_BATCH)
+        t0 = time.perf_counter()
+        engine.query_many(workload)
+        best = min(best, (time.perf_counter() - t0) * 1e3)
+    return best
+
+
+def _format_tier(crops, frames, cfg, workload):
+    """v3 (fp32 npz) vs v4 (quantized lazy/mmap) over the same stream."""
+    labels = np.rint(crops[:, 0, 0, 0] * N_CLASSES).astype(np.int64) \
+        % N_CLASSES
+    out = {}
+    with tempfile.TemporaryDirectory() as d3, \
+            tempfile.TemporaryDirectory() as d4:
+        cat3 = _build_archive(d3, crops, frames, cfg, shard_format=3)
+        cat4 = _build_archive(d4, crops, frames, cfg, shard_format=None)
+
+        # --- bytes/object (seal-time accounting, satellite: n_bytes)
+        b3 = sum(m.n_bytes for m in cat3)
+        b4 = sum(m.n_bytes for m in cat4)
+        out["bytes_per_object_v3"] = round(b3 / N_OBJECTS, 1)
+        out["bytes_per_object_v4"] = round(b4 / N_OBJECTS, 1)
+        out["bytes_ratio"] = round(b3 / b4, 2)
+
+        # --- cold load latency (warm the dequant kernel's jit at every
+        # shard shape first so v4 is not billed for tracing)
+        warm = ArchiveQueryEngine(cat4, oracle_labels=labels,
+                                  batch_size=GT_BATCH)
+        warm.query_many(workload)
+        out["cold_load_ms_v3"] = round(_cold_load_ms(cat3, workload), 2)
+        out["cold_load_ms_v4"] = round(_cold_load_ms(cat4, workload), 2)
+        out["cold_load_ratio"] = round(out["cold_load_ms_v3"]
+                                       / out["cold_load_ms_v4"], 2)
+        out["cold_query_ms_v3"] = round(_cold_query_ms(cat3, labels,
+                                                       workload), 2)
+        out["cold_query_ms_v4"] = round(_cold_query_ms(cat4, labels,
+                                                       workload), 2)
+
+        # --- lossless path: lazy (mmap + in-kernel dequant rank) answers
+        # byte-identical to the eagerly dequantized fp32 load of the SAME
+        # v4 files, for every shard / class / Kx
+        lossless = True
+        loader = ShardLoader(cat4)
+        for m in cat4:
+            lazy = loader.get(m.shard_id)
+            eager = cat4.load_shard(m.shard_id)
+            for cls in range(N_CLASSES):
+                for kx in range(1, cfg.K + 1):
+                    a = lazy.lookup(cls, Kx=kx)
+                    b = eager.lookup(cls, Kx=kx)
+                    if a != b or not np.array_equal(lazy.frames_of(a),
+                                                    eager.frames_of(b)):
+                        lossless = False
+        out["lossless_identical"] = bool(lossless)
+
+        # --- quantized-crop recall: GT pass reads uint8 crops (v4) vs
+        # fp32 crops (v3); answers compared frame-for-frame
+        e3 = ArchiveQueryEngine(cat3, gt_apply=_CountingGT(),
+                                gt_flops_per_image=GT_FLOPS,
+                                batch_size=GT_BATCH)
+        e4 = ArchiveQueryEngine(cat4, gt_apply=_CountingGT(),
+                                gt_flops_per_image=GT_FLOPS,
+                                batch_size=GT_BATCH)
+        r3, _ = e3.query_many(workload)
+        r4, _ = e4.query_many(workload)
+        want = got = 0
+        for a, b in zip(r3, r4):
+            want += len(a.frames)
+            got += len(np.intersect1d(a.frames, b.frames))
+        out["crop_recall"] = round(got / want, 4) if want else 1.0
+        out["quantized_identical"] = bool(
+            all(np.array_equal(a.frames, b.frames)
+                for a, b in zip(r3, r4)))
+    return out
 
 
 def run():
@@ -161,8 +292,11 @@ def run():
                 "shard_evictions_cold": cold.n_shard_evictions,
                 "shard_loads_warm": warm.n_shard_loads,
                 "shard_evictions_warm": warm.n_shard_evictions,
+                "resident_bytes": engine.stats.resident_bytes,
+                "shard_hit_rate": round(engine.stats.shard_hit_rate, 3),
             })
 
+    fmt = _format_tier(crops, frames, cfg, workload)
     record = {
         "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "n_objects": N_OBJECTS,
@@ -173,6 +307,7 @@ def run():
         "single_gt_pass": bool(single_gt_pass),
         "warm_gt_invocations": 0 if warm_zero else
             max(r["warm_gt_invocations"] for r in per_shard_count),
+        **fmt,
     }
     append_trajectory(BENCH_PATH, record)
     for r in per_shard_count:
@@ -183,11 +318,25 @@ def run():
     emit("archive.equivalence", 0.0,
          f"union={equals_union}|one_pass={single_gt_pass}"
          f"|warm_zero={warm_zero}")
+    emit("archive.format.bytes_per_object", fmt["bytes_per_object_v4"],
+         f"v3={fmt['bytes_per_object_v3']}|ratio={fmt['bytes_ratio']}x")
+    emit("archive.format.cold_load", fmt["cold_load_ms_v4"] * 1e3,
+         f"v3_ms={fmt['cold_load_ms_v3']}|ratio={fmt['cold_load_ratio']}x"
+         f"|lossless={fmt['lossless_identical']}"
+         f"|recall={fmt['crop_recall']}")
     assert equals_union, \
         "archive answers diverge from the per-shard QueryEngine union"
     assert single_gt_pass, \
         "cold fan-out ran more GT launches than one unioned pass"
     assert warm_zero, "warm archive query issued GT invocations"
+    assert fmt["bytes_ratio"] >= 3.0, \
+        f"v4 bytes/object only {fmt['bytes_ratio']}x below v3 (need >=3x)"
+    assert fmt["cold_load_ratio"] >= 2.0, \
+        f"v4 cold load only {fmt['cold_load_ratio']}x faster (need >=2x)"
+    assert fmt["lossless_identical"], \
+        "lazy v4 answers diverge from eager fp32 dequant of the same files"
+    assert fmt["crop_recall"] >= 0.99, \
+        f"quantized-crop recall {fmt['crop_recall']} < 0.99"
 
 
 if __name__ == "__main__":

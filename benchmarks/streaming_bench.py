@@ -19,7 +19,6 @@ future streaming-path PRs are measured against this one.
 from __future__ import annotations
 
 import os
-import tempfile
 import time
 
 import numpy as np
@@ -79,11 +78,8 @@ def _gt_apply(batch):
 
 
 def _bytes_of(index, tag):
-    with tempfile.TemporaryDirectory() as d:
-        p = os.path.join(d, tag)
-        index.save(p)
-        with open(p + ".json", "rb") as f1, open(p + ".npz", "rb") as f2:
-            return f1.read(), f2.read()
+    del tag
+    return index.save_bytes()
 
 
 def run():

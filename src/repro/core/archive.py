@@ -6,15 +6,25 @@ without bound over a long stream and a query must hold the whole archive's
 centroids and rep-crops resident. Following the partitioned-repository
 shape of zero-streaming cameras / ExSample, the archive here is a sequence
 of **time shards**: ``StreamingIngestor`` seals its live index at an
-objects-per-shard or frame-window boundary (reusing the v3 columnar
-``TopKIndex.save``), resets clustering state, and keeps feeding. Each
+objects-per-shard or frame-window boundary (through ``TopKIndex.save`` —
+v4 quantized columnar by default), resets clustering state, and keeps
+feeding. Each
 sealed shard is byte-identical to a one-shot ``ingest()`` of its window —
 the rollover invariant, pinned by ``tests/test_archive.py``.
 
 * ``ShardCatalog`` — the JSON manifest (shard id, frame window, object /
-  cluster counts, object-id base, npz paths) plus ``seal``/``load_shard``.
-* ``ShardLoader`` — LRU-bounded loader keeping at most ``capacity`` shard
-  indexes resident; reloads are cheap (columnar npz) and counted.
+  cluster counts, object-id base, on-disk bytes, paths) plus
+  ``seal``/``load_shard``; the manifest is written atomically (temp file +
+  ``os.replace``), so a crash mid-seal leaves at worst orphan shard files
+  that no manifest references.
+* ``LazyShardIndex`` — the query-side view of a v4 quantized shard
+  (DESIGN.md §14): per-column ``.npy`` files opened ``mmap_mode="r"``,
+  ranks computed by the fused ``dequant_topk`` kernel straight off the
+  uint8 mean-prob rows, rep-crops dequantized per gathered row only when
+  a cluster actually reaches the GT pass.
+* ``ShardLoader`` — LRU-bounded loader whose capacity is **bytes
+  resident** (materialized heap per shard), with a deprecated shard-count
+  mode for old callers; loads/hits/evictions are counted.
 * ``ArchiveQueryEngine`` — extends the PR-2 batching one level up:
   ``query_many`` fans ``lookup`` out across all shards, unions the
   **uncached** rep crops across all shards *and* all queries into one
@@ -40,7 +50,10 @@ import numpy as np
 
 from repro.core.engine import (classify_crops, grow_row_cache,
                                normalize_kx, probe_row_cache)
-from repro.core.index import TopKIndex
+from repro.core.index import (INDEX_FORMAT, PROB_GLOBAL_SCALE, ClassMap,
+                              TopKIndex, _resolve_kx, dequant_crops,
+                              saved_nbytes)
+from repro.kernels import ops as kops
 
 CATALOG_NAME = "catalog.json"
 
@@ -56,13 +69,16 @@ class ShardMeta:
     obj_base: int                # global arrival position of the shard's
                                  # first object (ids inside are shard-local)
     path: str                    # basename under the catalog root
+    n_bytes: int = 0             # on-disk bytes of the shard's index files
+                                 # (0 in pre-v4 manifests)
 
 
 class ShardCatalog:
     """JSON manifest of sealed shards under one archive directory.
 
     ``<root>/catalog.json`` lists the shards in time order; each shard's
-    index lives at ``<root>/<path>.(json|npz)`` in the v3 columnar format.
+    index lives at ``<root>/<path>.*`` (v4 quantized per-column ``.npy``
+    by default; any ``TopKIndex`` format loads).
     """
 
     FORMAT = 1
@@ -83,11 +99,18 @@ class ShardCatalog:
         return cat
 
     def save(self):
+        """Atomically rewrite the manifest: the new contents go to a temp
+        file that ``os.replace`` swaps in, so a crash mid-write can never
+        leave a truncated/corrupt ``catalog.json`` — readers see either
+        the old manifest or the new one."""
         os.makedirs(self.root, exist_ok=True)
-        with open(os.path.join(self.root, CATALOG_NAME), "w") as f:
+        final = os.path.join(self.root, CATALOG_NAME)
+        tmp = final + ".tmp"
+        with open(tmp, "w") as f:
             json.dump({"format": self.FORMAT,
                        "shards": [asdict(m) for m in self.shards]}, f,
                       indent=1)
+        os.replace(tmp, final)
 
     def next_shard_id(self) -> int:
         return self.shards[-1].shard_id + 1 if self.shards else 0
@@ -99,24 +122,34 @@ class ShardCatalog:
         raise KeyError(f"unknown shard id {shard_id}")
 
     def seal(self, index: TopKIndex, frame_lo: int, frame_hi: int,
-             obj_base: int) -> ShardMeta:
+             obj_base: int, *, format: int = INDEX_FORMAT) -> ShardMeta:
         """Persist ``index`` as the next shard and append it to the
         manifest. The caller (``StreamingIngestor._seal_shard``) guarantees
-        the index is final — sealed shards are immutable."""
+        the index is final — sealed shards are immutable. Shard files are
+        written before the manifest references them; if the manifest write
+        fails, the in-memory shard list is rolled back so a retry reseals
+        under the same id (overwriting the orphan files)."""
         sid = self.next_shard_id()
         name = f"shard_{sid:05d}"
         os.makedirs(self.root, exist_ok=True)
-        index.save(os.path.join(self.root, name))
+        prefix = os.path.join(self.root, name)
+        index.save(prefix, format=format)
         meta = ShardMeta(shard_id=sid, frame_lo=int(frame_lo),
                          frame_hi=int(frame_hi),
                          n_objects=index.n_objects,
                          n_clusters=index.n_clusters,
-                         obj_base=int(obj_base), path=name)
+                         obj_base=int(obj_base), path=name,
+                         n_bytes=saved_nbytes(prefix))
         self.shards.append(meta)
-        self.save()
+        try:
+            self.save()
+        except BaseException:
+            self.shards.pop()
+            raise
         return meta
 
     def load_shard(self, shard_id: int) -> TopKIndex:
+        """Eagerly load a shard as a full ``TopKIndex`` (any format)."""
         return TopKIndex.load(self.path_of(shard_id))
 
     def __len__(self) -> int:
@@ -126,31 +159,308 @@ class ShardCatalog:
         return iter(self.shards)
 
 
-class ShardLoader:
-    """LRU-bounded shard index loader: at most ``capacity`` sealed shards
-    resident at once. Reloads are counted (``n_loads`` / ``n_hits`` /
-    ``n_evictions``) so benchmarks can report cache behaviour."""
+class _LazyCropColumn:
+    """Fancy-index view over the mmap'd uint8 rep-crop column: dequantizes
+    only the gathered rows (the GT pass touches a handful of uncached
+    clusters; the crop file — the bulk of a shard — is never read whole)."""
 
-    def __init__(self, catalog: ShardCatalog, capacity: int = 4):
-        if capacity < 1:
-            raise ValueError(f"capacity must be >= 1, got {capacity}")
+    def __init__(self, store: "_LazyStore"):
+        self._store = store
+        self._qparams: Optional[np.ndarray] = None
+
+    def __getitem__(self, rows) -> np.ndarray:
+        if self._qparams is None:
+            self._qparams = np.asarray(self._store._col("crop_qparams"),
+                                       np.float32)
+        q = self._store._col("rep_crops_q")
+        return dequant_crops(np.asarray(q[rows]), self._qparams)
+
+
+class _LazyStore:
+    """Read-side ``ClusterStore`` facade over a v4 shard's mmap'd columns.
+
+    Exposes exactly the surface ``ArchiveQueryEngine`` reads — ``n_rows``,
+    ``versions``/``first_objs`` (mmap), ``rows_of``, ``frames_of_each``,
+    ``rep_crops[rows]``, ``_cid_to_row`` — materializing only small
+    derived caches (cid sorter, member/frame CSR) on first use."""
+
+    def __init__(self, prefix: str, meta: dict):
+        self._prefix = prefix
+        self.n_rows = int(meta["n_rows"])
+        self._cols: Dict[str, np.ndarray] = {}
+        self._rc64: Optional[np.ndarray] = None
+        self._sorter: Optional[np.ndarray] = None
+        self._csr = None
+        self._cid_map: Optional[Dict[int, int]] = None
+        self.rep_crops = _LazyCropColumn(self)
+
+    def _col(self, name: str) -> np.ndarray:
+        a = self._cols.get(name)
+        if a is None:
+            a = np.load(self._prefix + f".{name}.npy", mmap_mode="r")
+            self._cols[name] = a
+        return a
+
+    @property
+    def versions(self) -> np.ndarray:
+        return self._col("versions")
+
+    @property
+    def first_objs(self) -> np.ndarray:
+        return self._col("first_objs")
+
+    @property
+    def row_cids(self) -> np.ndarray:
+        return self._col("row_cids")
+
+    @property
+    def counts(self) -> np.ndarray:
+        return self._col("counts")
+
+    def _row_cids64(self) -> np.ndarray:
+        if self._rc64 is None:
+            self._rc64 = np.asarray(self._col("row_cids"), np.int64)
+        return self._rc64
+
+    @property
+    def _cid_to_row(self) -> Dict[int, int]:
+        if self._cid_map is None:
+            self._cid_map = {int(c): r for r, c in
+                             enumerate(self._row_cids64().tolist())}
+        return self._cid_map
+
+    def rows_of(self, cids) -> np.ndarray:
+        """Vectorized cid -> row map; raises KeyError on unknown cids
+        (the ``ClusterStore.rows_of`` contract)."""
+        cids = np.asarray(cids, np.int64)
+        if len(cids) == 0:
+            return np.zeros((0,), np.int64)
+        if self.n_rows == 0:
+            raise KeyError(f"unknown cluster ids: {cids.tolist()[:5]}")
+        rc = self._row_cids64()
+        if self._sorter is None:
+            self._sorter = np.argsort(rc, kind="stable")
+        pos = np.searchsorted(rc, cids, sorter=self._sorter)
+        rows = self._sorter[np.minimum(pos, self.n_rows - 1)]
+        bad = rc[rows] != cids
+        if bad.any():
+            raise KeyError(f"unknown cluster ids: "
+                           f"{np.unique(cids[bad]).tolist()[:5]}")
+        return rows
+
+    def _build_csr(self):
+        """CSR over the saved member/frame logs — fold entries (file
+        order) then attach entries (already canonical (obj, frame) order
+        on disk), matching ``ClusterStore._build_csr`` exactly."""
+        if self._csr is None:
+            log_cids = np.asarray(self._col("log_cids"), np.int64)
+            att_cids = np.asarray(self._col("att_cids"), np.int64)
+            rows = np.concatenate([self.rows_of(log_cids),
+                                   self.rows_of(att_cids)])
+            objs = np.concatenate([
+                np.asarray(self._col("log_objs"), np.int64),
+                np.asarray(self._col("att_objs"), np.int64)])
+            frames = np.concatenate([
+                np.asarray(self._col("log_frames"), np.int64),
+                np.asarray(self._col("att_frames"), np.int64)])
+            order = np.argsort(rows, kind="stable")
+            counts = np.bincount(rows, minlength=self.n_rows)
+            indptr = np.zeros(self.n_rows + 1, np.int64)
+            np.cumsum(counts, out=indptr[1:])
+            self._csr = (order, indptr, objs, frames)
+        return self._csr
+
+    def frames_of_rows(self, rows: np.ndarray) -> np.ndarray:
+        order, indptr, _, frames = self._build_csr()
+        if len(rows) == 0:
+            return np.array([], np.int64)
+        sel = np.concatenate([order[indptr[r]:indptr[r + 1]] for r in rows])
+        return np.unique(frames[sel]).astype(np.int64)
+
+    def frames_of_each(self, rows: np.ndarray) -> List[np.ndarray]:
+        order, indptr, _, frames = self._build_csr()
+        return [np.unique(frames[order[indptr[r]:indptr[r + 1]]]
+                          ).astype(np.int64) for r in rows]
+
+    def cache_nbytes(self) -> int:
+        """Heap bytes of materialized caches. Mapped column pages are NOT
+        counted: they belong to the OS page cache and are reclaimed under
+        memory pressure without the loader's help."""
+        import sys
+        total = 0
+        for a in (self._rc64, self._sorter):
+            if a is not None:
+                total += a.nbytes
+        if self._csr is not None:
+            total += sum(int(x.nbytes) for x in self._csr)
+        if self._cid_map is not None:
+            total += sys.getsizeof(self._cid_map)
+        return total
+
+
+class LazyShardIndex:
+    """Query-side view of a v4 quantized shard (DESIGN.md §14).
+
+    Duck-types the slice of ``TopKIndex`` that ``ArchiveQueryEngine``
+    touches. ``lookup`` ranks the uint8 mean-prob rows with the fused
+    ``dequant_topk`` kernel — the per-row scale is applied in-kernel, so
+    no fp32 probability matrix is ever materialized — and caches the
+    (M, K) top-k ids for the shard's residency. Because the kernel, the
+    eager loader, and ``TopKIndex._rank_rows`` share one dequant op order
+    and one tie rule (lowest class id), lazy answers are byte-identical
+    to eagerly loading the same shard."""
+
+    def __init__(self, prefix: str, meta: dict):
+        self._prefix = prefix
+        self.meta = meta
+        self.K = int(meta["K"])
+        self.n_local_classes = int(meta["n_local_classes"])
+        self.class_map = (ClassMap(np.array(meta["class_map"]))
+                          if meta["class_map"] is not None else None)
+        self.store = _LazyStore(prefix, meta)
+        self._topk_ids: Optional[np.ndarray] = None
+
+    @property
+    def n_clusters(self) -> int:
+        return self.store.n_rows
+
+    @property
+    def n_objects(self) -> int:
+        return int(np.asarray(self.store.counts, np.int64).sum())
+
+    def _rank_ids(self) -> np.ndarray:
+        if self._topk_ids is None:
+            q = self.store._col("mean_probs_q")
+            M, C = q.shape
+            if M == 0 or C == 0:
+                self._topk_ids = np.zeros((M, 0), np.int32)
+            else:
+                scales = np.asarray(self.store._col("prob_scales"),
+                                    np.float32)
+                _, ids = kops.dequant_topk(
+                    np.asarray(q), scales, min(self.K, C),
+                    global_scale=PROB_GLOBAL_SCALE)
+                # focuslint: disable=host-sync -- designed once-per-shard
+                # boundary: rank ids are fetched a single time on first
+                # lookup and cached for the shard's resident lifetime
+                self._topk_ids = np.asarray(ids)
+        return self._topk_ids
+
+    def lookup(self, global_class: int,
+               Kx: Optional[int] = None) -> List[int]:
+        """Cluster ids whose top-Kx (local) classes include the queried
+        class — same contract and validation as ``TopKIndex.lookup``."""
+        Kx = _resolve_kx(Kx, self.K)
+        local = (self.class_map.to_local(global_class)
+                 if self.class_map is not None else global_class)
+        ids = self._rank_ids()
+        n_classes = (self.store._col("mean_probs_q").shape[1]
+                     if self.store.n_rows else 0)
+        if ids.size == 0 or not 0 <= local < n_classes:
+            return []
+        kx = min(Kx, ids.shape[1])
+        rows = np.nonzero((ids[:, :kx] == local).any(axis=1))[0]
+        return self.store._row_cids64()[rows].tolist()
+
+    def frames_of(self, cids: Sequence[int]) -> np.ndarray:
+        if len(cids) == 0:
+            return np.array([], np.int64)
+        return self.store.frames_of_rows(self.store.rows_of(cids))
+
+    def rep_crops(self, cids: Sequence[int]) -> np.ndarray:
+        return self.store.rep_crops[self.store.rows_of(cids)]
+
+    @property
+    def nbytes(self) -> int:
+        """Materialized heap bytes (rank-id cache + store caches) — the
+        resident-size unit for the bytes-bounded ``ShardLoader``."""
+        total = self.store.cache_nbytes()
+        if self._topk_ids is not None:
+            total += self._topk_ids.nbytes
+        return total
+
+
+DEFAULT_CAPACITY_BYTES = 256 << 20      # 256 MiB of materialized shard state
+
+
+class ShardLoader:
+    """LRU-bounded shard index loader whose capacity is **bytes resident**.
+
+    ``capacity_bytes`` bounds the summed heap footprint of resident shard
+    indexes (``TopKIndex.nbytes`` for eagerly loaded formats <= 3;
+    ``LazyShardIndex.nbytes`` — materialized caches only, mmap pages are
+    the OS's — for v4). The bound is re-checked on every ``get`` because a
+    lazy shard's footprint grows as its rank/CSR caches build; the most
+    recently used shard is never evicted, even when it alone exceeds the
+    budget. Reloads are counted (``n_loads`` / ``n_hits`` /
+    ``n_evictions``) and ``resident_bytes`` reports current residency.
+
+    ``capacity_shards`` (or the deprecated positional-era alias
+    ``capacity=``) instead bounds the resident *count* — the pre-v4
+    behaviour, kept so existing callers and benchmarks don't break. New
+    code should pass ``capacity_bytes``; the count mode will go away once
+    callers migrate. Exactly one bound applies: passing both is an error,
+    passing neither defaults to ``DEFAULT_CAPACITY_BYTES``.
+    """
+
+    def __init__(self, catalog: ShardCatalog,
+                 capacity_bytes: Optional[int] = None, *,
+                 capacity_shards: Optional[int] = None,
+                 capacity: Optional[int] = None):
+        if capacity is not None:
+            if capacity_shards is not None:
+                raise ValueError(
+                    "pass capacity_shards or the deprecated capacity "
+                    "alias, not both")
+            capacity_shards = capacity
+        if capacity_bytes is not None and capacity_shards is not None:
+            raise ValueError(
+                "capacity_bytes and capacity_shards are mutually "
+                "exclusive bounds")
+        if capacity_bytes is None and capacity_shards is None:
+            capacity_bytes = DEFAULT_CAPACITY_BYTES
+        if capacity_shards is not None and capacity_shards < 1:
+            raise ValueError(
+                f"capacity must be >= 1 shard, got {capacity_shards}")
+        if capacity_bytes is not None and capacity_bytes < 1:
+            raise ValueError(
+                f"capacity_bytes must be >= 1, got {capacity_bytes}")
         self.catalog = catalog
-        self.capacity = capacity
+        self.capacity_bytes = capacity_bytes
+        self.capacity_shards = capacity_shards
         self._lru: "OrderedDict[int, TopKIndex]" = OrderedDict()
         self.n_loads = 0
         self.n_hits = 0
         self.n_evictions = 0
+
+    @property
+    def resident_bytes(self) -> int:
+        """Summed heap bytes of resident shard indexes right now."""
+        return sum(int(ix.nbytes) for ix in self._lru.values())
+
+    def _over_budget(self) -> bool:
+        if self.capacity_shards is not None:
+            return len(self._lru) > self.capacity_shards
+        return self.resident_bytes > self.capacity_bytes
+
+    def _load(self, shard_id: int):
+        prefix = self.catalog.path_of(shard_id)
+        with open(prefix + ".json") as f:
+            meta = json.load(f)
+        if meta.get("format", 1) >= 4:
+            return LazyShardIndex(prefix, meta)
+        return TopKIndex.load(prefix)
 
     def get(self, shard_id: int) -> TopKIndex:
         idx = self._lru.get(shard_id)
         if idx is not None:
             self._lru.move_to_end(shard_id)
             self.n_hits += 1
-            return idx
-        idx = self.catalog.load_shard(shard_id)
-        self.n_loads += 1
-        self._lru[shard_id] = idx
-        while len(self._lru) > self.capacity:
+        else:
+            idx = self._load(shard_id)
+            self.n_loads += 1
+            self._lru[shard_id] = idx
+        while len(self._lru) > 1 and self._over_budget():
             self._lru.popitem(last=False)
             self.n_evictions += 1
         return idx
@@ -191,12 +501,23 @@ class ArchiveBatchStats:
 
 @dataclass
 class ArchiveStats:
-    """Cumulative counters over the archive engine's lifetime."""
+    """Cumulative counters over the archive engine's lifetime, including
+    the loader's residency (mirrored after every query/prefetch so one
+    snapshot serves benchmark reports and the serve summary table)."""
     n_queries: int = 0
     n_candidates: int = 0
     n_cache_hits: int = 0
     n_gt_invocations: int = 0
     gt_flops: float = 0.0
+    n_shard_loads: int = 0       # cold shard reads over the lifetime
+    n_shard_hits: int = 0        # LRU hits over the lifetime
+    n_shard_evictions: int = 0
+    resident_bytes: int = 0      # loader heap residency at last snapshot
+
+    @property
+    def shard_hit_rate(self) -> float:
+        total = self.n_shard_loads + self.n_shard_hits
+        return self.n_shard_hits / total if total else 0.0
 
 
 class ArchiveQueryEngine:
@@ -216,12 +537,17 @@ class ArchiveQueryEngine:
                  gt_flops_per_image: float = 0.0,
                  batch_size: int = 256, batch_pad: int = 64,
                  oracle_labels: Optional[np.ndarray] = None,
-                 capacity: int = 4, ingestor=None):
+                 capacity: Optional[int] = None,
+                 capacity_bytes: Optional[int] = None, ingestor=None):
         if (gt_apply is None) == (oracle_labels is None):
             raise ValueError(
                 "exactly one of gt_apply / oracle_labels must be provided")
         self.catalog = catalog
-        self.loader = ShardLoader(catalog, capacity)
+        # capacity= keeps the pre-v4 shard-count bound for existing
+        # callers; capacity_bytes= is the bytes-resident bound (neither
+        # given -> the loader's byte default)
+        self.loader = ShardLoader(catalog, capacity_bytes=capacity_bytes,
+                                  capacity_shards=capacity)
         self.gt_apply = gt_apply
         self.gt_flops_per_image = gt_flops_per_image
         self.batch_size = batch_size
@@ -248,6 +574,14 @@ class ArchiveQueryEngine:
             if live is not None and live.n_clusters:
                 yield (self.catalog.next_shard_id(), live,
                        self.ingestor.shard_obj_base)
+
+    def _sync_loader_stats(self):
+        """Mirror the loader's residency counters into ``stats`` so one
+        snapshot reports everything (satellite of DESIGN.md §14)."""
+        self.stats.n_shard_loads = self.loader.n_loads
+        self.stats.n_shard_hits = self.loader.n_hits
+        self.stats.n_shard_evictions = self.loader.n_evictions
+        self.stats.resident_bytes = self.loader.resident_bytes
 
     def _shard_cache(self, shard_id: int, n_rows: int):
         vers, labels = self._cache.get(shard_id,
@@ -339,6 +673,7 @@ class ArchiveQueryEngine:
                 self.catalog.next_shard_id(), self.ingestor.index,
                 self.ingestor.shard_obj_base,
                 np.asarray(list(touched_live), np.int64))
+        self._sync_loader_stats()
         return n
 
     # -- queries ---------------------------------------------------------------
@@ -479,6 +814,7 @@ class ArchiveQueryEngine:
         self.stats.n_cache_hits += n_hits
         self.stats.n_gt_invocations += n_gt
         self.stats.gt_flops += batch.gt_flops
+        self._sync_loader_stats()
         return results, batch
 
     def query(self, global_class: int,

@@ -25,12 +25,136 @@ and as the unit of ``add_cluster``.
 from __future__ import annotations
 
 import json
+import os
 from dataclasses import dataclass, field
 from typing import Dict, Iterator, List, Mapping, Optional, Sequence
 
 import numpy as np
 
 OTHER = -1   # sentinel for the OTHER class in *global* space
+
+INDEX_FORMAT = 4            # default save format (v4: quantized columnar)
+
+# Format-level dequant multipliers for the v4 quantized columns. The stored
+# per-row scale is the row's max magnitude; the effective dequant scale is
+# ``GLOBAL * row_scale`` computed in float32, in that order — the lazy
+# archive path stages GLOBAL through SMEM in the ``dequant_topk`` kernel
+# and the eager loader mirrors the same op order, so both produce bitwise
+# identical float32 values from the same quantized bytes.
+PROB_GLOBAL_SCALE = np.float32(1.0 / 255.0)     # uint8 mean-probs
+CENT_GLOBAL_SCALE = np.float32(1.0 / 127.0)     # int8 centroids
+
+
+def _resolve_kx(Kx: Optional[int], K: int) -> int:
+    """Validate a query-time Kx against the ingest-time K (shared by the
+    eager ``TopKIndex.lookup`` and the archive's lazy shard lookup)."""
+    if Kx is None:
+        return K
+    if Kx < 0:
+        raise ValueError(f"Kx must be >= 0, got {Kx}")
+    if Kx > K:
+        raise ValueError(
+            f"Kx={Kx} exceeds the ingest-time K={K}; ranks beyond "
+            f"the top-K were not stored at ingest (re-ingest with a "
+            f"larger K to query deeper)")
+    return Kx
+
+
+def _shrink_ints(a: np.ndarray) -> np.ndarray:
+    """Narrowest of int16/int32/int64 holding ``a`` — chosen purely from
+    the value range, so equal arrays always serialize identically (the
+    byte-identity invariants depend on it)."""
+    a = np.asarray(a, np.int64)
+    if a.size == 0:
+        return a.astype(np.int16)
+    lo, hi = int(a.min()), int(a.max())
+    for dt in (np.int16, np.int32):
+        info = np.iinfo(dt)
+        if info.min <= lo and hi <= info.max:
+            return a.astype(dt)
+    return a
+
+
+def _quant_rows_uint8(x: Optional[np.ndarray], n_rows: int):
+    """Non-negative rows (M, C) -> (q uint8, row_scales f32 (M,)) with
+    dequant ``q * (PROB_GLOBAL_SCALE * row_scales)``. All-zero rows get a
+    sentinel scale of 1 so dequant stays exact (0)."""
+    if x is None:
+        return (np.zeros((n_rows, 0), np.uint8),
+                np.ones((n_rows,), np.float32))
+    x = np.asarray(x, np.float32)
+    if x.size == 0:
+        return x.astype(np.uint8), np.ones((x.shape[0],), np.float32)
+    rowmax = x.max(axis=1)
+    row_scales = np.where(rowmax > 0, rowmax, 1.0).astype(np.float32)
+    scale = (PROB_GLOBAL_SCALE * row_scales).astype(np.float32)
+    q = np.clip(np.round(x / scale[:, None]), 0, 255).astype(np.uint8)
+    return q, row_scales
+
+
+def _quant_rows_int8(x: Optional[np.ndarray], n_rows: int):
+    """Signed rows (M, D) -> (q int8 in [-127, 127], row_scales f32 (M,))
+    with dequant ``q * (CENT_GLOBAL_SCALE * row_scales)``."""
+    if x is None:
+        return (np.zeros((n_rows, 0), np.int8),
+                np.ones((n_rows,), np.float32))
+    x = np.asarray(x, np.float32)
+    if x.size == 0:
+        return x.astype(np.int8), np.ones((x.shape[0],), np.float32)
+    rowmax = np.abs(x).max(axis=1)
+    row_scales = np.where(rowmax > 0, rowmax, 1.0).astype(np.float32)
+    scale = (CENT_GLOBAL_SCALE * row_scales).astype(np.float32)
+    q = np.clip(np.round(x / scale[:, None]), -127, 127).astype(np.int8)
+    return q, row_scales
+
+
+def _quant_global_uint8(x: np.ndarray):
+    """Bounded array -> (q uint8, qparams f32 (2,) = [scale, lo]) with
+    dequant ``q * scale + lo`` — one affine grid per shard for rep-crops,
+    which are bounded post-normalization."""
+    x = np.asarray(x, np.float32)
+    if x.size == 0:
+        return x.astype(np.uint8), np.array([1.0, 0.0], np.float32)
+    lo = np.float32(x.min())
+    scale = np.float32((np.float32(x.max()) - lo) / np.float32(255.0))
+    if scale <= 0:
+        scale = np.float32(1.0)
+    q = np.clip(np.round((x - lo) / scale), 0, 255).astype(np.uint8)
+    return q, np.array([scale, lo], np.float32)
+
+
+def dequant_crops(q: np.ndarray, qparams: np.ndarray) -> np.ndarray:
+    """Invert ``_quant_global_uint8`` — shared by the eager loader and the
+    archive's lazy per-row crop gather so both dequantize bitwise alike."""
+    return (q.astype(np.float32) * np.float32(qparams[0])
+            + np.float32(qparams[1]))
+
+
+def saved_files(prefix: str) -> List[str]:
+    """Suffixes (deterministic order) of the files ``TopKIndex.save``
+    wrote at ``prefix``. THE enumeration unit for byte-identity
+    comparisons and on-disk size accounting — formats <= 3 are
+    ``.json`` + ``.npz``; v4 is ``.json`` plus one ``.npy`` per column."""
+    with open(prefix + ".json") as f:
+        meta = json.load(f)
+    if meta.get("format", 1) >= 4:
+        return [".json"] + [f".{c}.npy" for c in meta["columns"]]
+    return [".json", ".npz"]
+
+
+def saved_file_bytes(prefix: str) -> tuple:
+    """((suffix, bytes), ...) of a saved index — the comparison unit used
+    by every equivalence harness (rollover, chunked/one-shot, mesh)."""
+    out = []
+    for suf in saved_files(prefix):
+        with open(prefix + suf, "rb") as f:
+            out.append((suf, f.read()))
+    return tuple(out)
+
+
+def saved_nbytes(prefix: str) -> int:
+    """Total on-disk bytes of a saved index."""
+    return sum(os.path.getsize(prefix + suf) for suf in saved_files(prefix))
 
 
 @dataclass
@@ -475,16 +599,16 @@ class TopKIndex:
     def _rank_rows(self, P: np.ndarray) -> np.ndarray:
         """Rank matrix (m, C) for probability rows P: rank of class c in the
         row's top-K mean probs, or K when c is outside the top-K — one
-        argpartition over the rows instead of a per-cluster Python loop."""
+        vectorized sort over the rows instead of a per-cluster Python loop.
+
+        Ties break to the LOWEST class index (stable argsort on the negated
+        rows) — the same tie order as ``jax.lax.top_k`` and the
+        ``dequant_topk`` kernel's extraction loop, so the archive's lazy
+        quantized rank path agrees with this eager path even where
+        quantization collapses nearby probabilities into exact ties."""
         m, C = P.shape
         K = min(self.K, C)
-        if K < C:
-            part = np.argpartition(-P, K - 1, axis=1)[:, :K]
-        else:
-            part = np.broadcast_to(np.arange(C), (m, C)).copy()
-        vals = np.take_along_axis(P, part, 1)
-        order = np.argsort(-vals, axis=1, kind="stable")
-        top = np.take_along_axis(part, order, 1)       # (m, K)
+        top = np.argsort(-P, axis=1, kind="stable")[:, :K]     # (m, K)
         ranks = np.full((m, C), K, np.int32)
         np.put_along_axis(ranks, top,
                           np.broadcast_to(np.arange(K, dtype=np.int32),
@@ -528,15 +652,7 @@ class TopKIndex:
         K..Kx-1 with no signal to the caller."""
         if self._ranks is None:
             self._build()
-        if Kx is None:
-            Kx = self.K
-        elif Kx < 0:
-            raise ValueError(f"Kx must be >= 0, got {Kx}")
-        elif Kx > self.K:
-            raise ValueError(
-                f"Kx={Kx} exceeds the ingest-time K={self.K}; ranks beyond "
-                f"the top-K were not stored at ingest (re-ingest with a "
-                f"larger K to query deeper)")
+        Kx = _resolve_kx(Kx, self.K)
         local = (self.class_map.to_local(global_class)
                  if self.class_map is not None else global_class)
         if self._ranks.size == 0 or not 0 <= local < self._ranks.shape[1]:
@@ -586,66 +702,104 @@ class TopKIndex:
             "specialized": self.class_map is not None,
         }
 
-    def save(self, path: str):
+    def save(self, path: str, *, format: int = INDEX_FORMAT):
         """Persist index metadata + arrays (MongoDB stand-in, §5).
 
-        Format v3 is columnar: one npz key per *field* across all clusters
-        (centroids (M, D), mean_probs (M, C), rep_crops, counts, ...) plus
-        the flat fold log and the attach log (the latter written in
-        canonical (obj, frame) order, so a streaming ingest saves
-        byte-identically to a one-shot ingest of the same stream no matter
-        when duplicates were attached). ``load`` reads all three layouts
-        (v1 dict-era, v2 single-log, v3).
+        Format v4 (default) is quantized columnar: one mmap-able ``.npy``
+        per field — centroids int8 + per-row scales, mean-probs uint8 +
+        per-row scales, rep-crops uint8 on one per-shard affine grid, and
+        log/int columns narrowed to the smallest int dtype holding their
+        range. Every quantization parameter is a pure function of the
+        array values, so equal indexes still save byte-identically (the
+        rollover / chunked-one-shot / mesh invariants carry over to v4
+        unchanged). Format v3 (``format=3``) keeps the fp32 single-npz
+        columnar layout for baselines and migration tests; the attach log
+        is written in canonical (obj, frame) order in both. ``load`` reads
+        all four layouts (v1 dict-era, v2 single-log, v3, v4).
         """
+        if format not in (3, 4):
+            raise ValueError(f"unsupported save format {format}")
         s = self.store
         M = s.n_rows
         log_rows = s._m_rows[:s.m_n]
         att_rows, att_objs, att_frames = s._attach_canonical()
-        arrays = {
-            "row_cids": s.row_cids[:M],
-            "centroids": (s.centroids[:M] if s.centroids is not None
-                          else np.zeros((M, 0), np.float32)),
-            "mean_probs": (s.mean_probs[:M] if s.mean_probs is not None
-                           else np.zeros((M, 0), np.float32)),
-            "rep_crops": (s.rep_crops[:M] if s.rep_crops is not None
-                          else np.zeros((M, 0), np.float32)),
-            "counts": s.counts[:M],
-            "first_objs": s.first_objs[:M],
-            "versions": s.versions[:M],
-            "log_cids": s.row_cids[log_rows],
-            "log_objs": s._m_objs[:s.m_n],
-            "log_frames": s._m_frames[:s.m_n],
-            "att_cids": s.row_cids[att_rows],
-            "att_objs": att_objs,
-            "att_frames": att_frames,
-        }
         meta = {
-            "format": 3,
+            "format": format,
             "K": self.K,
             "n_local_classes": self.n_local_classes,
             "class_map": (self.class_map.global_ids.tolist()
                           if self.class_map else None),
         }
-        np.savez_compressed(path + ".npz", **arrays)
+        if format == 3:
+            arrays = {
+                "row_cids": s.row_cids[:M],
+                "centroids": (s.centroids[:M] if s.centroids is not None
+                              else np.zeros((M, 0), np.float32)),
+                "mean_probs": (s.mean_probs[:M] if s.mean_probs is not None
+                               else np.zeros((M, 0), np.float32)),
+                "rep_crops": (s.rep_crops[:M] if s.rep_crops is not None
+                              else np.zeros((M, 0), np.float32)),
+                "counts": s.counts[:M],
+                "first_objs": s.first_objs[:M],
+                "versions": s.versions[:M],
+                "log_cids": s.row_cids[log_rows],
+                "log_objs": s._m_objs[:s.m_n],
+                "log_frames": s._m_frames[:s.m_n],
+                "att_cids": s.row_cids[att_rows],
+                "att_objs": att_objs,
+                "att_frames": att_frames,
+            }
+            np.savez_compressed(path + ".npz", **arrays)
+            with open(path + ".json", "w") as f:
+                json.dump(meta, f)
+            return
+
+        cents_q, cent_scales = _quant_rows_int8(
+            s.centroids[:M] if s.centroids is not None else None, M)
+        probs_q, prob_scales = _quant_rows_uint8(
+            s.mean_probs[:M] if s.mean_probs is not None else None, M)
+        crops = (s.rep_crops[:M] if s.rep_crops is not None
+                 else np.zeros((M, 0), np.float32))
+        crops_q, crop_qparams = _quant_global_uint8(crops)
+        columns = {
+            "row_cids": _shrink_ints(s.row_cids[:M]),
+            "counts": _shrink_ints(s.counts[:M]),
+            "first_objs": _shrink_ints(s.first_objs[:M]),
+            "versions": _shrink_ints(s.versions[:M]),
+            "log_cids": _shrink_ints(s.row_cids[log_rows]),
+            "log_objs": _shrink_ints(s._m_objs[:s.m_n]),
+            "log_frames": _shrink_ints(s._m_frames[:s.m_n]),
+            "att_cids": _shrink_ints(s.row_cids[att_rows]),
+            "att_objs": _shrink_ints(att_objs),
+            "att_frames": _shrink_ints(att_frames),
+            "centroids_q": cents_q,
+            "centroid_scales": cent_scales,
+            "mean_probs_q": probs_q,
+            "prob_scales": prob_scales,
+            "rep_crops_q": crops_q,
+            "crop_qparams": crop_qparams,
+        }
+        meta["columns"] = list(columns)
+        meta["n_rows"] = int(M)
+        meta["crop_shape"] = list(crops.shape[1:])
+        # column files first, manifest last: a crash mid-save leaves at
+        # worst orphan .npy files that no manifest references
+        for name, arr in columns.items():
+            np.save(path + f".{name}.npy", arr)
         with open(path + ".json", "w") as f:
             json.dump(meta, f)
 
-    def save_bytes(self) -> tuple:
-        """(meta json bytes, npz bytes) of this index as ``save`` writes
-        them — THE byte-identity comparison unit pinned by the streaming /
-        pipeline equivalence harnesses and the ingest bench gate. One
-        implementation, so a save-format change cannot silently diverge
-        what the different harnesses compare."""
-        import os
+    def save_bytes(self, *, format: int = INDEX_FORMAT) -> tuple:
+        """((suffix, bytes), ...) of this index as ``save`` writes it —
+        THE byte-identity comparison unit pinned by the streaming /
+        pipeline / mesh equivalence harnesses and the ingest bench gate.
+        One implementation (via ``saved_file_bytes``), so a save-format
+        change cannot silently diverge what the harnesses compare."""
         import tempfile
         with tempfile.TemporaryDirectory() as d:
             path = os.path.join(d, "idx")
-            self.save(path)
-            with open(path + ".json", "rb") as f:
-                meta = f.read()
-            with open(path + ".npz", "rb") as f:
-                npz = f.read()
-        return meta, npz
+            self.save(path, format=format)
+            return saved_file_bytes(path)
 
     def _load_columnar(self, arrays: Mapping):
         s = self.store
@@ -685,11 +839,17 @@ class TopKIndex:
     def load(cls, path: str) -> "TopKIndex":
         with open(path + ".json") as f:
             meta = json.load(f)
-        arrays = np.load(path + ".npz")
         cmap = (ClassMap(np.array(meta["class_map"]))
                 if meta["class_map"] is not None else None)
         idx = cls(meta["K"], meta["n_local_classes"], cmap)
-        if meta.get("format", 1) >= 2:
+        fmt = meta.get("format", 1)
+        if fmt >= 4:
+            cols = {name: np.load(path + f".{name}.npy")
+                    for name in meta["columns"]}
+            idx._load_columnar(_dequant_v4(meta, cols))
+            return idx
+        arrays = np.load(path + ".npz")
+        if fmt >= 2:
             idx._load_columnar(arrays)
         else:                      # dict-era layout: per-cid npz keys
             for cid_s, info in meta["clusters"].items():
@@ -699,3 +859,47 @@ class TopKIndex:
                     arrays[f"probs_{cid}"], count=info["count"],
                     members=info["members"], frames=info["frames"]))
         return idx
+
+    @property
+    def nbytes(self) -> int:
+        """Heap bytes of the store's arrays (allocated capacity) plus the
+        rank matrix — the resident-size unit the archive's bytes-bounded
+        ``ShardLoader`` accounts eagerly loaded shards with."""
+        s = self.store
+        total = 0
+        for a in (s.centroids, s.mean_probs, s.rep_crops):
+            if a is not None:
+                total += a.nbytes
+        for a in (s.counts, s.fold_counts, s.first_objs, s.row_cids,
+                  s.versions, s._m_rows, s._m_objs, s._m_frames,
+                  s._a_rows, s._a_objs, s._a_frames):
+            total += a.nbytes
+        if s._csr is not None:
+            total += sum(int(x.nbytes) for x in s._csr)
+        if s._sorter is not None:
+            total += s._sorter.nbytes
+        if self._ranks is not None:
+            total += self._ranks.nbytes
+        return total
+
+
+def _dequant_v4(meta: Mapping, cols: Mapping) -> Dict[str, np.ndarray]:
+    """Reconstruct the v3-shaped column mapping from v4 quantized columns
+    (the shared dequant math — bitwise identical to the lazy archive
+    path's in-kernel / per-row dequantization)."""
+    M = int(meta["n_rows"])
+    cents = (cols["centroids_q"].astype(np.float32)
+             * (CENT_GLOBAL_SCALE
+                * cols["centroid_scales"].astype(np.float32))[:, None])
+    probs = (cols["mean_probs_q"].astype(np.float32)
+             * (PROB_GLOBAL_SCALE
+                * cols["prob_scales"].astype(np.float32))[:, None])
+    crop_shape = tuple(meta["crop_shape"])
+    crops = dequant_crops(cols["rep_crops_q"],
+                          cols["crop_qparams"]).reshape((M, *crop_shape))
+    out = {"centroids": cents, "mean_probs": probs, "rep_crops": crops}
+    for name in ("row_cids", "counts", "first_objs", "versions",
+                 "log_cids", "log_objs", "log_frames",
+                 "att_cids", "att_objs", "att_frames"):
+        out[name] = np.asarray(cols[name], np.int64)
+    return out

@@ -291,7 +291,8 @@ class StreamingIngestor:
                  class_map: Optional[ClassMap] = None,
                  n_local_classes: Optional[int] = None,
                  catalog=None, shard_objects: Optional[int] = None,
-                 shard_frames: Optional[int] = None, pipeline=None):
+                 shard_frames: Optional[int] = None,
+                 shard_format: Optional[int] = None, pipeline=None):
         if pipeline is not None and cheap_apply is not None:
             raise ValueError(
                 "pass either cheap_apply (host-staged) or pipeline "
@@ -314,9 +315,14 @@ class StreamingIngestor:
             raise ValueError(f"shard_objects must be >= 1: {shard_objects}")
         if shard_frames is not None and shard_frames < 1:
             raise ValueError(f"shard_frames must be >= 1: {shard_frames}")
+        if shard_format is not None and catalog is None:
+            raise ValueError("shard_format needs a catalog")
         self.catalog = catalog
         self.shard_objects = shard_objects
         self.shard_frames = shard_frames
+        # None -> the catalog's default (v4 quantized columnar); pin 3 to
+        # seal fp32 npz shards (baselines, migration fixtures)
+        self.shard_format = shard_format
         if pipeline is not None:
             # bind last: a constructor rejected above must not consume
             # the pipeline (binding is permanent per stream)
@@ -723,13 +729,15 @@ class StreamingIngestor:
             self._index = self._empty_index()
         self._attach_eligible()
         self._dup_objs, self._dup_frames, self._dup_roots = [], [], []
+        seal_kw = ({} if self.shard_format is None
+                   else {"format": self.shard_format})
         meta = self.catalog.seal(
             self._index,
             frame_lo=(self._shard_frame_lo
                       if self._shard_frame_lo is not None else 0),
             frame_hi=(self._shard_frame_hi
                       if self._shard_frame_hi is not None else 0),
-            obj_base=self._shard_obj_base)
+            obj_base=self._shard_obj_base, **seal_kw)
         # clusters touched since the last flush now live in the sealed
         # shard; report them shard-tagged so a query-side cache can warm
         # them under their final identity

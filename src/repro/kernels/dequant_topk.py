@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: fused int8/uint8 dequant + top-k extraction.
+
+The v4 archive format (DESIGN.md §14) stores each shard's mean-probs as
+uint8 with a per-row scale and a format-level global multiplier
+(``core.index.PROB_GLOBAL_SCALE``). The archive rank path needs the top-K
+class ids of every quantized row at shard load — this kernel applies the
+per-row scale in VMEM and runs the same K online max-extract+mask passes
+as ``topk_mask``, so a quantized shard's fp32 probability matrix is never
+materialized (not in HBM, not on the host).
+
+Scale staging: the global multiplier enters through SMEM (the
+``pixel_diff``/``frame_gate`` scalar pattern — per-format/per-shard
+constants are traced operands, so sweeping them never recompiles) and the
+per-row scales ride alongside the quantized rows as a (BM, 1) VMEM block.
+The effective scale is ``sg * s_row`` computed in f32, in that order —
+``TopKIndex.load``'s eager dequant mirrors the exact op order, so eager
+and lazy rank paths agree bitwise, ties included.
+
+VMEM budget (BM=128, C=1024 padded): int8 tile 128 KiB + f32 dequant copy
+512 KiB + outputs ~200 KiB << 16 MiB/core.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -3e38
+
+
+def _kernel(sg_ref, q_ref, s_ref, v_ref, i_ref, *, k: int):
+    scale = sg_ref[0] * s_ref[...]                    # (BM, 1) f32
+    x = q_ref[...].astype(jnp.float32) * scale        # dequant, VMEM only
+    C = x.shape[1]
+    cols = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+
+    def body(t, carry):
+        x, = carry
+        m = jnp.max(x, axis=1)                        # (BM,)
+        # smallest column index attaining the max (ties -> lowest index,
+        # matching jax.lax.top_k and the eager stable-argsort ranks)
+        is_max = x == m[:, None]
+        idx = jnp.min(jnp.where(is_max, cols, C), axis=1).astype(jnp.int32)
+        v_ref[:, t] = m
+        i_ref[:, t] = idx
+        x = jnp.where(cols == idx[:, None], _NEG, x)
+        return (x,)
+
+    jax.lax.fori_loop(0, k, body, (x,))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bm", "interpret"))
+def dequant_topk(sg, q, scales, k: int, *, bm: int = 128,
+                 interpret: bool = True):
+    """sg (1,) f32, q (M, C) int, scales (M,) f32 ->
+    (values (M, k) f32, indices (M, k) i32), descending.
+
+    ``values = top_k(q * (sg * scales)[:, None])`` with ties to the lowest
+    column index. M is padded to a ``min(bm, max(8, M))`` tile multiple
+    (pad scales are 1, pad rows compute garbage trimmed by ``[:M]``) and C
+    to a 128-lane multiple with the dtype's minimum: for int8 that is -128,
+    strictly below the quantizer's [-127, 127] range; for uint8 it is 0,
+    which can tie with real zero entries but always loses the tie-break —
+    pad columns sit at the highest indices, so for ``k <= C`` real passes
+    a padded column is never extracted. Scales must be positive (the v4
+    quantizer's all-zero-row sentinel is 1, never 0 or negative).
+    """
+    M, C = q.shape
+    bm = min(bm, max(8, M))
+    Mp = (M + bm - 1) // bm * bm
+    Cp = (C + 127) // 128 * 128
+    qp = jnp.pad(q, ((0, Mp - M), (0, Cp - C)),
+                 constant_values=jnp.iinfo(q.dtype).min)
+    sp = jnp.pad(scales.astype(jnp.float32).reshape(M, 1),
+                 ((0, Mp - M), (0, 0)), constant_values=1.0)
+
+    vals, idxs = pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid=(Mp // bm,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda mi: (0,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, Cp), lambda mi: (mi, 0)),
+            pl.BlockSpec((bm, 1), lambda mi: (mi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda mi: (mi, 0)),
+            pl.BlockSpec((bm, k), lambda mi: (mi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Mp, k), jnp.float32),
+            jax.ShapeDtypeStruct((Mp, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(sg, qp, sp)
+    return vals[:M], idxs[:M]

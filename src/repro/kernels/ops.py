@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import centroid_assign as _ca
+from repro.kernels import dequant_topk as _dq
 from repro.kernels import flash_attention as _fa
 from repro.kernels import frame_gate as _fg
 from repro.kernels import pixel_diff as _pd
@@ -63,6 +64,46 @@ def topk(logits, k: int, *, bb: int = 128):
     if B == 0:
         return (jnp.zeros((0, k), jnp.float32), jnp.zeros((0, k), jnp.int32))
     return _tk.topk(logits, k, bb=bb, interpret=_interpret())
+
+
+def dequant_topk(q, scales, k: int, *, global_scale=1.0, bm: int = 128):
+    """q (M, C) int8/uint8, scales (M,) f32 ->
+    (values (M, k) f32, indices (M, k) i32), descending.
+
+    Fused dequant + top-k over quantized rows: ``values`` are the top-k of
+    ``q * (global_scale * scales)[:, None]`` with ties to the LOWEST
+    column index — the archive's lazy rank path over v4 shards, never
+    materializing an fp32 copy of the probability matrix.
+    ``global_scale`` is the format-level multiplier (SMEM operand, so
+    per-shard variation never recompiles); ``scales`` are the stored
+    per-row scales and must be positive.
+
+    Pad/trim contract (explicit — tiny shard tails included): the row
+    tile is ``min(bm, max(8, M))``, M is padded to a tile multiple and C
+    to a 128-lane multiple with the input dtype's minimum (int8 pads at
+    -128, strictly below the quantizer's range; uint8 pads at 0, which
+    only ties and pad columns lose every tie-break), and outputs are
+    trimmed back to ``[:M]``. ``k > C`` (or ``k < 1``) raises; ``M == 0``
+    short-circuits to empty outputs. Float inputs raise — dequantizing an
+    already-dequantized matrix is a bug, use ``topk`` instead.
+    """
+    M, C = q.shape
+    if not 1 <= k <= C:
+        raise ValueError(
+            f"k must be in [1, C={C}], got {k}: the top-k of a (M, {C}) "
+            f"quantized matrix has at most {C} entries per row")
+    if not jnp.issubdtype(jnp.asarray(q).dtype, jnp.integer):
+        raise ValueError(
+            f"dequant_topk expects integer quantized rows, got "
+            f"{jnp.asarray(q).dtype}; for fp32 inputs use topk")
+    if scales.shape != (M,):
+        raise ValueError(
+            f"scales must be ({M},) to match q's rows, got {scales.shape}")
+    if M == 0:
+        return (jnp.zeros((0, k), jnp.float32), jnp.zeros((0, k), jnp.int32))
+    sg = jnp.asarray(global_scale, jnp.float32).reshape(1)
+    return _dq.dequant_topk(sg, jnp.asarray(q), jnp.asarray(scales), k,
+                            bm=bm, interpret=_interpret())
 
 
 def pixel_match(a, b, threshold, *, ba: int | None = None,

@@ -69,6 +69,19 @@ def topk_ref(logits, k: int):
     return v, i.astype(jnp.int32)
 
 
+def dequant_topk_ref(q, scales, k: int, global_scale=1.0):
+    """q (M, C) int, scales (M,) f32 -> (values (M, k) f32,
+    indices (M, k) i32), descending, ties to the lowest column.
+
+    Dequantizes ``q * (global_scale * scales)[:, None]`` in f32 — the same
+    op order as the kernel's in-VMEM dequant, so values compare exactly.
+    """
+    scale = (jnp.float32(global_scale)
+             * scales.astype(jnp.float32))[:, None]
+    v, i = jax.lax.top_k(q.astype(jnp.float32) * scale, k)
+    return v, i.astype(jnp.int32)
+
+
 def flash_attention_ref(q, k, v, causal: bool = True):
     """q,k,v: (B, S, H, dh) -> (B, S, H, dh). Plain softmax attention."""
     S = q.shape[1]

@@ -170,9 +170,11 @@ def _archive_ingest(crops, frames, apply_fn, acc_flops, cfg, class_map,
     catalog = ShardCatalog.open(args.archive)
     ing = _mk_ingestor(apply_fn, acc_flops, cfg, args, class_map=class_map,
                        catalog=catalog, shard_objects=args.shard_objects)
+    cache_kw = ({"capacity": args.shard_cache} if args.shard_cache > 0
+                else {"capacity_bytes": args.shard_cache_mb << 20})
     engine = ArchiveQueryEngine(catalog, gt_apply=gt_apply,
                                 gt_flops_per_image=gt_flops,
-                                capacity=args.shard_cache, ingestor=ing)
+                                ingestor=ing, **cache_kw)
     service = _mk_service(engine, args, ingestor=ing)
     bounds = np.linspace(0, len(crops), n_chunks + 1).astype(int)
     for rnd, (lo, hi) in enumerate(zip(bounds, bounds[1:])):
@@ -234,8 +236,12 @@ def main():
                          "cross-shard ArchiveQueryEngine")
     ap.add_argument("--shard-objects", type=int, default=2048,
                     help="archive mode: objects per sealed shard")
-    ap.add_argument("--shard-cache", type=int, default=4,
-                    help="archive mode: LRU capacity of resident shards")
+    ap.add_argument("--shard-cache", type=int, default=0,
+                    help="archive mode: LRU capacity in resident shard "
+                         "COUNT (deprecated bound; 0 = use --shard-cache-mb)")
+    ap.add_argument("--shard-cache-mb", type=int, default=256,
+                    help="archive mode: LRU capacity in MiB of resident "
+                         "shard heap state (ignored when --shard-cache > 0)")
     ap.add_argument("--mesh-devices", type=int, default=0,
                     help="shard streaming/archive ingest over a 1-D "
                          "('data',) mesh of N devices via the fused "
@@ -388,6 +394,12 @@ def main():
         print(f"  {ts.tenant}: {ts.n_completed}/{ts.n_submitted} served "
               f"p50={p50}ms p99={p99}ms deadline_missed="
               f"{ts.n_deadline_missed} rejected={ts.n_rejected}")
+    if args.archive:
+        st = engine.stats
+        print(f"[serve] shard cache: {st.resident_bytes / 2**20:.2f} MiB "
+              f"resident | {st.n_shard_loads} loads, {st.n_shard_hits} "
+              f"hits ({st.shard_hit_rate:.0%}), {st.n_shard_evictions} "
+              f"evictions")
     return 0
 
 

@@ -251,6 +251,24 @@ def test_sharded_pipeline_sync_budget_is_pinned():
     assert len(boundary) >= 2      # both fold-boundary fetches named
 
 
+def test_repo_archive_rank_sync_budget_is_pinned():
+    """Regression fixture (ISSUE 10): the lazy v4 shard path in
+    core/archive.py carries exactly ONE sanctioned host sync — the
+    once-per-shard fetch of the dequant_topk rank ids, cached for the
+    shard's resident lifetime. A second device fetch on the archive rank
+    path must fail the lint gate or consciously bump this pin."""
+    src = os.path.join(REPO_ROOT, "src", "repro")
+    # the kernels package must be in the analysis set: _rank_ids is hot
+    # only because it reaches the jitted ops.dequant_topk wrapper
+    report = run_analysis([os.path.join(src, "core", "archive.py"),
+                           os.path.join(src, "kernels")])
+    doc = json.loads(report.to_json(show_suppressed=True))
+    assert not [f for f in doc["findings"] if f["rule"] == "host-sync"]
+    syncs = [f for f in doc["suppressed"] if f["rule"] == "host-sync"]
+    assert len(syncs) == 1, sorted(f["line"] for f in syncs)
+    assert "once-per-shard" in syncs[0]["justification"]
+
+
 def test_repo_attach_exemption_is_suppressed():
     """ClusterStore.attach's count-only mutation is the one sanctioned
     cache-version exemption — suppressed with a recorded rationale."""

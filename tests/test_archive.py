@@ -20,8 +20,9 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core.archive import (ArchiveQueryEngine, ShardCatalog,
-                                ShardLoader)
+from repro.core import index as index_mod
+from repro.core.archive import (ArchiveQueryEngine, LazyShardIndex,
+                                ShardCatalog, ShardLoader)
 from repro.core.engine import QueryEngine
 from repro.core.ingest import IngestConfig, ingest
 from repro.core.streaming import StreamingIngestor
@@ -67,11 +68,9 @@ def _chunks(rng_draw, n, max_chunks=8):
 
 
 def _file_bytes(prefix):
-    out = []
-    for ext in (".json", ".npz"):
-        with open(prefix + ext, "rb") as f:
-            out.append(f.read())
-    return tuple(out)
+    # format-agnostic: enumerates whatever files save() wrote (v3 npz or
+    # v4 per-column npy)
+    return index_mod.saved_file_bytes(prefix)
 
 
 def _windows(catalog, n_total):
@@ -373,3 +372,174 @@ def test_oracle_mode_uses_obj_base_offsets(tmp_path):
         assert batch.n_gt_invocations > 0
         assert sum(r.n_gt_invocations for r in results) \
             == batch.n_gt_invocations
+
+
+# ---------------------------------------------------------------------------
+# crash safety, bytes-bounded LRU, quantized lazy shards
+# ---------------------------------------------------------------------------
+
+def test_catalog_seal_survives_manifest_write_failure(tmp_path, monkeypatch):
+    """Failure injected between shard write and manifest rename: the old
+    manifest stays intact and loadable, the in-memory shard list rolls
+    back, and a retry reseals under the same shard id."""
+    import repro.core.archive as archive_mod
+    catalog = _tiny_archive(str(tmp_path))               # 3 shards
+    before = [m.shard_id for m in catalog]
+    crops, frames = _stream(5, 40)
+    idx, _ = ingest(crops, frames, _cheap, 1e9, CFG)
+
+    def boom(src, dst):
+        raise OSError("injected: crash before manifest rename")
+
+    monkeypatch.setattr(archive_mod.os, "replace", boom)
+    with pytest.raises(OSError, match="injected"):
+        catalog.seal(idx, int(frames[0]), int(frames[-1]), obj_base=10**6)
+    monkeypatch.undo()
+
+    # in-memory state rolled back; on-disk manifest untouched
+    assert [m.shard_id for m in catalog] == before
+    assert catalog.next_shard_id() == len(before)
+    reopened = ShardCatalog.open(str(tmp_path))
+    assert [m.shard_id for m in reopened] == before
+    for m in reopened:
+        assert reopened.load_shard(m.shard_id).n_clusters == m.n_clusters
+
+    # retry reseals under the same id (overwriting the orphan files)
+    meta = catalog.seal(idx, int(frames[0]), int(frames[-1]),
+                        obj_base=10**6)
+    assert meta.shard_id == len(before)
+    assert meta.n_bytes == index_mod.saved_nbytes(
+        catalog.path_of(meta.shard_id))
+    again = ShardCatalog.open(str(tmp_path))
+    assert [m.shard_id for m in again] == before + [meta.shard_id]
+
+
+def test_shard_loader_bytes_bound_evicts_and_tracks_residency(tmp_path):
+    """capacity_bytes bounds summed heap residency, re-checked on every
+    get; the most recently used shard is never evicted even when it alone
+    busts the budget."""
+    catalog = _tiny_archive(str(tmp_path))               # 3 shards
+    # 1-byte budget: any resident shard is over budget, so each get keeps
+    # exactly the MRU shard and evicts the rest
+    loader = ShardLoader(catalog, capacity_bytes=1)
+    a = loader.get(0)
+    a.lookup(0)                                          # grow rank cache
+    assert len(loader) == 1 and loader.resident_bytes > 1
+    loader.get(1)
+    assert len(loader) == 1 and loader.n_evictions == 1
+    loader.get(1)
+    assert loader.n_hits == 1
+
+    # a budget that fits everything: no evictions, residency is the sum
+    # of the per-shard heap footprints
+    roomy = ShardLoader(catalog, capacity_bytes=1 << 30)
+    for m in catalog:
+        roomy.get(m.shard_id).lookup(0)
+    assert roomy.n_evictions == 0 and len(roomy) == 3
+    assert roomy.resident_bytes == sum(
+        int(roomy.get(m.shard_id).nbytes) for m in catalog)
+
+
+def test_shard_loader_capacity_kwargs(tmp_path):
+    """Exactly one bound applies: bytes (default), count via
+    capacity_shards, or count via the deprecated capacity alias."""
+    catalog = _tiny_archive(str(tmp_path))               # 3 shards
+    # deprecated alias behaves exactly like capacity_shards
+    by_alias = ShardLoader(catalog, capacity=1)
+    by_kw = ShardLoader(catalog, capacity_shards=1)
+    for loader in (by_alias, by_kw):
+        loader.get(0)
+        loader.get(1)
+        assert loader.n_evictions == 1 and len(loader) == 1
+    with pytest.raises(ValueError):
+        ShardLoader(catalog, capacity_bytes=10, capacity_shards=2)
+    with pytest.raises(ValueError):
+        ShardLoader(catalog, capacity_shards=2, capacity=2)
+    with pytest.raises(ValueError):
+        ShardLoader(catalog, capacity_bytes=0)
+    with pytest.raises(ValueError):
+        ShardLoader(catalog, capacity_shards=0)
+    # neither bound -> bytes default, all three shards fit
+    default = ShardLoader(catalog)
+    assert default.capacity_bytes is not None
+    for m in catalog:
+        default.get(m.shard_id)
+    assert default.n_evictions == 0
+
+
+def test_archive_stats_surface_loader_residency(tmp_path):
+    """ArchiveStats mirrors the loader's residency after every
+    query/prefetch: resident_bytes, hit rate, evictions."""
+    catalog = _tiny_archive(str(tmp_path))               # 3 shards
+    engine = ArchiveQueryEngine(catalog, gt_apply=_gt_apply, capacity=2)
+    assert engine.stats.resident_bytes == 0
+    engine.query_many(list(range(N_CLASSES)))
+    assert engine.stats.n_shard_loads == 3
+    assert engine.stats.n_shard_evictions >= 1          # capacity 2 binds
+    assert engine.stats.resident_bytes == engine.loader.resident_bytes > 0
+    # a loader that fits the whole archive: second round is all hits
+    roomy = ArchiveQueryEngine(catalog, gt_apply=_gt_apply)
+    roomy.query_many(list(range(N_CLASSES)))
+    roomy.query_many(list(range(N_CLASSES)))
+    assert roomy.stats.n_shard_hits == 3
+    assert roomy.stats.shard_hit_rate == 0.5
+
+
+def test_lazy_v4_shard_answers_match_eager_dequant(tmp_path):
+    """The lossless-path identity: a v4 shard served lazily (mmap columns
+    + in-kernel dequant rank) answers lookup / frames_of / rep_crops
+    byte-identically to eagerly loading the same files into fp32."""
+    crops, frames = _stream(41, 150)
+    idx, _ = ingest(crops, frames, _cheap, 1e9, CFG)
+    path = str(tmp_path / "shard")
+    idx.save(path)                                       # v4 default
+    import json as _json
+    with open(path + ".json") as f:
+        meta = _json.load(f)
+    lazy = LazyShardIndex(path, meta)
+    eager = index_mod.TopKIndex.load(path)
+    assert (lazy.n_clusters, lazy.n_objects) \
+        == (eager.n_clusters, eager.n_objects)
+    for cls in range(N_CLASSES):
+        for kx in range(1, CFG.K + 1):
+            a, b = lazy.lookup(cls, Kx=kx), eager.lookup(cls, Kx=kx)
+            assert a == b
+            np.testing.assert_array_equal(lazy.frames_of(a),
+                                          eager.frames_of(b))
+    cids = sorted(eager.clusters)
+    np.testing.assert_array_equal(lazy.rep_crops(cids),
+                                  eager.rep_crops(cids))
+    with pytest.raises(KeyError):
+        lazy.frames_of([10**9])
+    with pytest.raises(ValueError):
+        lazy.lookup(0, Kx=CFG.K + 1)
+
+
+def test_mixed_format_catalog_serves_v3_and_v4_shards(tmp_path):
+    """A catalog holding a v3 (fp32 npz) and a v4 (quantized) shard
+    serves both through one loader — eager for v3, lazy for v4 — and the
+    fan-out still equals the per-shard union."""
+    crops, frames = _stream(43, 140)
+    idx1, _ = ingest(crops[:70], frames[:70], _cheap, 1e9, CFG)
+    idx2, _ = ingest(crops[70:], frames[70:], _cheap, 1e9, CFG)
+    catalog = ShardCatalog.open(str(tmp_path))
+    catalog.seal(idx1, int(frames[0]), int(frames[69]), obj_base=0,
+                 format=3)
+    catalog.seal(idx2, int(frames[70]), int(frames[-1]), obj_base=70)
+    loader = ShardLoader(catalog)
+    assert not isinstance(loader.get(0), LazyShardIndex)
+    assert isinstance(loader.get(1), LazyShardIndex)
+    assert catalog.shards[0].n_bytes > 0
+    assert catalog.shards[1].n_bytes > 0
+
+    engine = ArchiveQueryEngine(catalog, gt_apply=_gt_apply)
+    results, _ = engine.query_many(list(range(N_CLASSES)))
+    for cls, res in zip(range(N_CLASSES), results):
+        parts = []
+        for m in catalog:
+            shard_engine = QueryEngine(catalog.load_shard(m.shard_id),
+                                       gt_apply=_gt_apply)
+            parts.append(shard_engine.query(cls).frames)
+        want = (np.unique(np.concatenate(parts)) if parts
+                else np.array([], np.int64))
+        np.testing.assert_array_equal(res.frames, want)

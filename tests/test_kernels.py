@@ -372,3 +372,120 @@ def test_motion_gate_property(H, W, data):
     np.testing.assert_allclose(np.asarray(nb), np.asarray(nbr), atol=1e-6)
     np.testing.assert_allclose(np.asarray(t), np.asarray(tr), atol=1e-6)
     np.testing.assert_array_equal(np.asarray(h), np.asarray(hr))
+
+
+# ---------------------------------------------------------------------------
+# dequant_topk
+# ---------------------------------------------------------------------------
+
+def _quant_rows(M, C, dtype, seed):
+    r = np.random.default_rng(seed)
+    if dtype == np.uint8:
+        q = r.integers(0, 256, (M, C)).astype(np.uint8)
+    else:
+        q = r.integers(-127, 128, (M, C)).astype(np.int8)
+    scales = r.uniform(0.1, 2.0, M).astype(np.float32)
+    return q, scales
+
+
+@pytest.mark.parametrize("M,C,k", [
+    (1, 1, 1), (7, 5, 3), (33, 16, 4), (64, 128, 128), (129, 200, 7),
+    (130, 257, 60),
+])
+@pytest.mark.parametrize("dtype", [np.uint8, np.int8])
+def test_dequant_topk_matches_ref(M, C, k, dtype):
+    """Exact: kernel and oracle apply the identical f32 scale chain, so
+    values match bitwise across non-multiple-of-block shapes."""
+    q, scales = _quant_rows(M, C, dtype, M * C + k)
+    v, i = ops.dequant_topk(q, scales, k, global_scale=1.0 / 255.0)
+    vr, ir = ref.dequant_topk_ref(q, scales, k, global_scale=1.0 / 255.0)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(vr))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+
+
+@pytest.mark.parametrize("bm", [8, 16, 128, 4096])
+def test_dequant_topk_block_sweep(bm):
+    q, scales = _quant_rows(100, 96, np.int8, 0)
+    v, i = ops.dequant_topk(q, scales, 5, bm=bm)
+    vr, ir = ref.dequant_topk_ref(q, scales, 5)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(vr))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+
+
+def test_dequant_topk_ties_break_to_lowest_index():
+    """Quantization collapses nearby probs into exact ties; rank order
+    must still be deterministic (lowest column index first) to match the
+    host-side _rank_rows and lax.top_k."""
+    q = np.full((3, 50), 7, np.uint8)
+    scales = np.ones(3, np.float32)
+    v, i = ops.dequant_topk(q, scales, 5)
+    np.testing.assert_array_equal(np.asarray(i),
+                                  np.tile(np.arange(5), (3, 1)))
+    np.testing.assert_array_equal(np.asarray(v), 7.0)
+
+
+def test_dequant_topk_per_row_scale_applied():
+    """Same quantized codes, different row scales -> scaled values; the
+    ranking (within a row) is scale-invariant for positive scales."""
+    q = np.tile(np.array([10, 30, 20], np.uint8), (2, 1))
+    scales = np.array([1.0, 0.5], np.float32)
+    v, i = ops.dequant_topk(q, scales, 3)
+    np.testing.assert_array_equal(np.asarray(i),
+                                  np.tile([1, 2, 0], (2, 1)))
+    np.testing.assert_array_equal(np.asarray(v),
+                                  [[30.0, 20.0, 10.0], [15.0, 10.0, 5.0]])
+
+
+def test_dequant_topk_k_equals_C_never_leaks_pad():
+    """C is padded to the 128-lane multiple with dtype-min; with k == C
+    every real column must appear exactly once per row."""
+    q, scales = _quant_rows(5, 16, np.int8, 9)
+    v, i = ops.dequant_topk(q, scales, 16)
+    vr, ir = ref.dequant_topk_ref(q, scales, 16)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(vr))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+    np.testing.assert_array_equal(np.sort(np.asarray(i), axis=1),
+                                  np.tile(np.arange(16), (5, 1)))
+
+
+def test_dequant_topk_uint8_zero_rows_with_pad():
+    """All-zero uint8 rows tie with the column pad value (0); the pad
+    columns sit at the highest indices so lowest-index ties keep them
+    out for every k <= C."""
+    q = np.zeros((4, 100), np.uint8)          # C=100 pads to 128
+    scales = np.ones(4, np.float32)
+    v, i = ops.dequant_topk(q, scales, 100)
+    assert (np.asarray(i) < 100).all()
+    np.testing.assert_array_equal(np.asarray(v), 0.0)
+
+
+def test_dequant_topk_empty_rows():
+    v, i = ops.dequant_topk(np.zeros((0, 12), np.uint8),
+                            np.zeros(0, np.float32), 4)
+    assert v.shape == (0, 4) and i.shape == (0, 4)
+    assert v.dtype == np.float32 and i.dtype == np.int32
+
+
+def test_dequant_topk_rejects_bad_inputs():
+    q, scales = _quant_rows(4, 10, np.uint8, 1)
+    with pytest.raises(ValueError):
+        ops.dequant_topk(q, scales, 11)       # k > C
+    with pytest.raises(ValueError):
+        ops.dequant_topk(q, scales, 0)
+    with pytest.raises(ValueError):
+        ops.dequant_topk(q.astype(np.float32), scales, 3)   # use topk
+    with pytest.raises(ValueError):
+        ops.dequant_topk(q, scales[:2], 3)    # scales shape mismatch
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 40), st.integers(2, 300), st.data())
+def test_dequant_topk_property(M, C, data):
+    k = data.draw(st.integers(1, C))
+    dtype = data.draw(st.sampled_from([np.uint8, np.int8]))
+    gs = data.draw(st.sampled_from([1.0, 1.0 / 255.0, 1.0 / 127.0]))
+    q, scales = _quant_rows(M, C, dtype, M * 31 + C)
+    v, i = ops.dequant_topk(q, scales, k, global_scale=gs)
+    vr, ir = ref.dequant_topk_ref(q, scales, k, global_scale=gs)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(vr))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))

@@ -112,15 +112,11 @@ def test_pipeline_rollover_shards_byte_identical(seed, shard_objects):
         ing_s.finish()
         ing_p.finish()
         assert len(cat_s.shards) == len(cat_p.shards) > 1
+        from repro.core.index import saved_file_bytes
         for ms, mp in zip(cat_s.shards, cat_p.shards):
-            for ext in (".json", ".npz"):
-                with open(os.path.join(cat_s.root, ms.path) + ext,
-                          "rb") as f:
-                    b_s = f.read()
-                with open(os.path.join(cat_p.root, mp.path) + ext,
-                          "rb") as f:
-                    b_p = f.read()
-                assert b_s == b_p, (ms.shard_id, ext)
+            assert saved_file_bytes(os.path.join(cat_s.root, ms.path)) \
+                == saved_file_bytes(os.path.join(cat_p.root, mp.path)), \
+                ms.shard_id
 
 
 # ---------------------------------------------------------------------------

@@ -183,15 +183,13 @@ def test_sharded_rollover_shards_byte_identical():
                          streams[nm][1][s:s + 77])
             ref.finish()
             assert len(cats[nm].shards) == len(cat_r.shards) > 1, nm
+            from repro.core.index import saved_file_bytes
             for ms, mr in zip(cats[nm].shards, cat_r.shards):
-                for ext in (".json", ".npz"):
-                    with open(os.path.join(cats[nm].root, ms.path) + ext,
-                              "rb") as f:
-                        b_s = f.read()
-                    with open(os.path.join(cat_r.root, mr.path) + ext,
-                              "rb") as f:
-                        b_r = f.read()
-                    assert b_s == b_r, (nm, ms.shard_id, ext)
+                assert saved_file_bytes(
+                    os.path.join(cats[nm].root, ms.path)) \
+                    == saved_file_bytes(
+                        os.path.join(cat_r.root, mr.path)), \
+                    (nm, ms.shard_id)
 
 
 def test_sharded_1device_rollover_byte_identical():
@@ -217,15 +215,11 @@ def test_sharded_1device_rollover_byte_identical():
             ref.feed(crops[s:s + 90], frames[s:s + 90])
         ref.finish()
         assert len(cat_s.shards) == len(cat_r.shards) > 1
+        from repro.core.index import saved_file_bytes
         for ms, mr in zip(cat_s.shards, cat_r.shards):
-            for ext in (".json", ".npz"):
-                with open(os.path.join(cat_s.root, ms.path) + ext,
-                          "rb") as f:
-                    b_s = f.read()
-                with open(os.path.join(cat_r.root, mr.path) + ext,
-                          "rb") as f:
-                    b_r = f.read()
-                assert b_s == b_r, (ms.shard_id, ext)
+            assert saved_file_bytes(os.path.join(cat_s.root, ms.path)) \
+                == saved_file_bytes(os.path.join(cat_r.root, mr.path)), \
+                ms.shard_id
 
 
 # ---------------------------------------------------------------------------

@@ -192,9 +192,7 @@ def test_gate_chunk_invariance_across_shard_rollovers():
             ing.flush()
         ing.finish()
 
-        def _file_bytes(prefix):
-            return tuple(open(prefix + ext, "rb").read()
-                         for ext in (".json", ".npz"))
+        from repro.core.index import saved_file_bytes as _file_bytes
 
         bases = [m.obj_base for m in catalog] + [len(crops)]
         assert len(catalog) == -(-len(crops) // 90)
